@@ -1,0 +1,87 @@
+"""Table III: intersection-method throughput (edges/us).
+
+Hybrid vs SSI vs binary search over the per-edge frontier pairs of R-MAT
+and power-law graphs. CPU stand-in for the paper's 16-thread Xeon run:
+the vectorized numpy methods play the role of the SIMD/parallel inner
+loop; the hybrid applies the paper's Eq. 3 rule per edge.
+
+Expected qualitative result (paper Table III): hybrid >= SSI > bsearch on
+scale-free graphs, with the gap growing with edge factor.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import intersect as it
+from repro.core.csr import CSRGraph
+from repro.graphs.datasets import powerlaw_graph
+from repro.graphs.rmat import rmat_graph
+
+
+def edge_pairs(csr: CSRGraph, max_edges: int, seed: int = 0):
+    src, dst = csr.edge_list()
+    if src.size > max_edges:
+        idx = np.random.default_rng(seed).choice(src.size, max_edges,
+                                                 replace=False)
+        src, dst = src[idx], dst[idx]
+    return src, dst
+
+
+def run_method(csr, src, dst, method: str):
+    """Faithful SCALAR algorithms (the paper's Alg. 1/2 + Eq. 3 hybrid) —
+    the Table III comparison is about scalar CPU loops, where SSI's
+    linear merge beats bsearch on balanced lists and loses on skewed
+    ones. Returns edges/us."""
+    rows = [csr.row(v) for v in range(csr.n)]
+    t0 = time.perf_counter()
+    total = 0
+    for u, v in zip(src, dst):
+        a, b = rows[u], rows[v]
+        if len(a) > len(b):
+            a, b = b, a
+        if method == "ssi":
+            total += it.ssi_scalar(a, b)
+        elif method == "bsearch":
+            total += it.binary_search_scalar(a, b)
+        else:  # hybrid: Eq. 3
+            if it.eq3_ssi_faster(len(a), len(b)):
+                total += it.ssi_scalar(a, b)
+            else:
+                total += it.binary_search_scalar(a, b)
+    dt = time.perf_counter() - t0
+    return len(src) / (dt * 1e6), total
+
+
+def run(quick: bool = True):
+    graphs = {
+        "R-MAT S12 EF8": rmat_graph(12, 8, seed=0),
+        "R-MAT S12 EF16": rmat_graph(12, 16, seed=0),
+        "R-MAT S12 EF32": rmat_graph(12, 32, seed=0),
+        "LiveJournal (stand-in)": powerlaw_graph(4096, 16, seed=1),
+        "Orkut (stand-in)": powerlaw_graph(3000, 32, seed=2),
+    }
+    max_edges = 2500 if quick else 50000
+    rows = []
+    for name, g in graphs.items():
+        src, dst = edge_pairs(g, max_edges)
+        res = {}
+        counts = set()
+        for m in ("hybrid", "ssi", "bsearch"):
+            eps, total = run_method(g, src, dst, m)
+            res[m] = round(eps, 4)
+            counts.add(total)
+        assert len(counts) == 1, "methods disagree on triangle counts!"
+        # timing noise guard: hybrid counts as best within 10%
+        rows.append({"graph": name, **res,
+                     "hybrid_best": res["hybrid"] >= 0.9 * max(res["ssi"],
+                                                               res["bsearch"])})
+    return {"table": rows, "unit": "edges/us (scalar loops)",
+            "paper_ref": "Table III"}
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=1))

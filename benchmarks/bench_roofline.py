@@ -1,0 +1,132 @@
+"""Roofline table: three terms per (arch x shape x mesh) from the dry-run.
+
+  compute    = dot_flops_per_device / PEAK_FLOPS_BF16
+  memory     = hbm_bytes_per_device / HBM_BW
+  collective = weighted_collective_bytes_per_device / ICI_BW
+
+All inputs are PER-DEVICE quantities from the partitioned module (the
+dry-run compiles the SPMD program, so shapes in the HLO are local), which
+makes the terms directly per-chip times. dot_flops is the loop-corrected
+census (cost_analysis does not multiply while bodies — see hlo_census).
+MODEL_FLOPS = 6*N_active*D tokens (LM train; x1/3 for inference fwd-only)
+compares 'useful' model math against compiled math.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.mesh import HW  # noqa: E402
+
+
+def model_flops_per_device(rec: dict) -> float:
+    """6*N_active*D for train, 2*N_active*D for single forward (per chip)."""
+    n_act = rec.get("active_params") or rec.get("params") or 0
+    kind = rec.get("kind", "")
+    chips = 1
+    for d in rec.get("mesh_shape", [1]):
+        chips *= d
+    if kind == "lm_train":
+        toks = rec.get("tokens_per_step", 0)
+        return 6.0 * n_act * toks / chips
+    if kind == "lm_prefill":
+        # batch*seq forward tokens
+        return 0.0  # filled by caller when shapes known
+    return 0.0
+
+
+def analyze_record(rec: dict) -> dict:
+    cost = rec.get("cost", {})
+    col = rec.get("collectives", {})
+    flops = col.get("dot_flops", 0.0) or cost.get("flops", 0.0)
+    hbm = cost.get("bytes_accessed", 0.0)
+    cbytes = col.get("weighted_bytes", 0.0)
+    t_c = flops / HW.PEAK_FLOPS_BF16
+    t_m = hbm / HW.HBM_BW
+    t_x = cbytes / HW.ICI_BW
+    terms = {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x}
+    dom = max(terms, key=terms.get)
+    total = max(t_c, t_m, t_x)
+    mf = model_flops_per_device(rec)
+    out = {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "ok": rec.get("ok", False),
+        **{k: round(v, 6) for k, v in terms.items()},
+        "bottleneck": dom.replace("_s", ""),
+        "roofline_bound_s": round(total, 6),
+        "hlo_dot_flops_per_dev": flops,
+    }
+    if mf > 0:
+        out["model_flops_per_dev"] = mf
+        out["useful_fraction"] = round(mf / max(flops, 1.0), 4)
+        # MFU-at-roofline-bound: useful flops / (time * peak)
+        out["roofline_mfu"] = round(
+            mf / (max(total, 1e-12) * HW.PEAK_FLOPS_BF16), 4
+        )
+    mem = rec.get("memory", {})
+    per_dev = mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0) + \
+        mem.get("output_bytes", 0)
+    out["hbm_bytes_per_dev"] = per_dev
+    out["fits_hbm"] = per_dev <= HW.HBM_BYTES
+    return out
+
+
+def run(dryrun_dir: str = "results/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if not rec.get("ok"):
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec["mesh"], "ok": False,
+                         "error": (rec.get("error") or "")[:120]})
+            continue
+        rows.append(analyze_record(rec))
+    ok = [r for r in rows if r.get("ok")]
+    summary = {
+        "n_cells": len(rows),
+        "n_ok": len(ok),
+        "bottleneck_histogram": {},
+    }
+    for r in ok:
+        b = r["bottleneck"]
+        summary["bottleneck_histogram"][b] = (
+            summary["bottleneck_histogram"].get(b, 0) + 1
+        )
+    return {"rows": rows, "summary": summary}
+
+
+def markdown_table(result: dict) -> str:
+    lines = [
+        "| arch | shape | mesh | compute(s) | memory(s) | collective(s) "
+        "| bottleneck | useful frac | fits HBM |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in result["rows"]:
+        if not r.get("ok"):
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | - | - "
+                f"| FAILED | - | - |"
+            )
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.4g} | {r['memory_s']:.4g} "
+            f"| {r['collective_s']:.4g} | **{r['bottleneck']}** "
+            f"| {r.get('useful_fraction', '-')} "
+            f"| {'yes' if r.get('fits_hbm') else 'NO'} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    res = run()
+    os.makedirs("results", exist_ok=True)
+    with open("results/roofline.json", "w") as f:
+        json.dump(res, f, indent=1)
+    print(markdown_table(res))
+    print("\nsummary:", json.dumps(res["summary"]))

@@ -1,0 +1,166 @@
+"""Figs. 9/10: distributed strong scaling — async vs async+cache vs TriC.
+
+Two layers of evidence (this container has one physical CPU):
+1. **Modeled makespans** via the paper's t(s)=alpha+s*beta network model:
+   per-device communication times for the async engine (max over devices,
+   no barriers; overlap absorbs compute) vs the TriC BSP simulator
+   (sum over supersteps of the max — barriers bill the stragglers).
+   Scales p = 4..64 as in Fig. 9.
+2. **Measured wall time** of the real compiled shard_map engine vs the
+   one-shot BSP baseline on 8 host devices (subprocess), p = 2/4/8.
+
+Expected: ~linear async scaling on scale-free graphs (paper: 14x from
+4->64 on LiveJournal1), cache cuts total time (up to 73% large-scale),
+TriC slower by 10-100x on scale-free inputs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+from repro.core.cache import build_static_degree_cache
+from repro.core.rma import simulate_rma_lcc
+from repro.core.tric_baseline import simulate_tric
+from repro.graphs.datasets import powerlaw_graph, uniform_graph
+from repro.graphs.rmat import rmat_graph
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+ALPHA = 2.0e-6  # one-sided get latency (Cray Aries class, paper §III-B)
+BETA = 1.0e-10  # s/byte
+# double buffering (paper §III-A) hides one of the two gets per edge
+# (the w_offsets get overlaps the previous edge's w_adj fetch), so the
+# effective per-get latency averages ~alpha/2:
+ALPHA_EFF = ALPHA / 2
+# TriC's two-sided query/response pays MPI matching + copies per query
+# (paper §II-E) and cannot cache/dedup:
+ALPHA_2S = 1.5e-6
+T_EDGE = 2.0e-6  # intersection compute per edge (~0.5 edges/us, Table III)
+
+
+def _async_time(st):
+    """Async RMA model: compute overlaps communication, NO barriers — the
+    makespan is the slowest device's max(comm, compute). Returns
+    (makespan, comm_makespan) — the paper's cache figures (Fig. 7/8, the
+    73%/47% reductions) are comm-time reductions, visible in the total
+    only in the comm-dominated regime (large graphs / many nodes)."""
+    comm = st.post_cache_gets * ALPHA_EFF + st.remote_bytes * BETA
+    compute = st.compute_edges * T_EDGE
+    return (float(np.maximum(comm, compute).max()) + ALPHA,
+            float(comm.max()) + ALPHA)
+
+
+def _tric_time(st, p, supersteps=8):
+    """TriC: blocking query/response supersteps with a barrier each; no
+    caching/dedup (one query per remote edge); the barrier bills everyone
+    for max(comm) + max(compute) per superstep — no overlap across it."""
+    comm_step = ((p - 1) * ALPHA + st.remote_gets * ALPHA_2S
+                 + st.remote_bytes_raw * BETA) / supersteps
+    compute_step = st.compute_edges * T_EDGE / supersteps
+    return supersteps * (float(comm_step.max()) + float(compute_step.max()))
+
+
+def modeled(quick: bool = True):
+    # quick sizes: small enough for the pure-python CLaMPI trace sim; note
+    # that p=64 over a 4-8k-vertex graph IS the paper's over-partitioning
+    # regime (§IV-D2), so quick-mode speedups saturate below the paper's
+    # 14x — run with --full for paper-scale graphs.
+    scale = 12 if quick else 16
+    n_small = 8192 if quick else 100000
+    graphs = {
+        f"R-MAT S{scale} EF16": rmat_graph(scale, 16, seed=0),
+        "LiveJournal1 (stand-in)": powerlaw_graph(n_small, 28, seed=1),
+        "uniform": uniform_graph(n_small, 16, seed=2),
+    }
+    out = []
+    for name, g in graphs.items():
+        rows = []
+        for p in (4, 8, 16, 32, 64):
+            nc = simulate_rma_lcc(g, p)
+            cache_bytes = max(int(16 * 2**30 / p), 1) if not quick else \
+                int(g.csr_nbytes() * 0.5)
+            c = simulate_rma_lcc(g, p, adj_cache_bytes=cache_bytes,
+                                 offsets_cache_bytes=int(0.8 * g.n),
+                                 use_degree_score=True)
+            t_async, comm_async = _async_time(nc)
+            t_cached, comm_cached = _async_time(c)
+            t_tric = _tric_time(nc, p)
+            rows.append({
+                "p": p,
+                "async_s": t_async,
+                "async_cached_s": t_cached,
+                "tric_s": t_tric,
+                "cache_gain_total": 1 - t_cached / max(t_async, 1e-12),
+                "cache_gain_comm": 1 - comm_cached / max(comm_async, 1e-12),
+                "vs_tric": t_tric / max(t_async, 1e-12),
+            })
+        base = rows[0]["async_s"]
+        for r in rows:
+            r["speedup_vs_p4"] = base / max(r["async_s"], 1e-12)
+        out.append({"graph": name, "rows": rows})
+    return out
+
+
+MEASURE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, time
+import numpy as np
+from repro.graphs.rmat import rmat_graph
+from repro.core.rma import build_sharded_problem
+from repro.core.cache import build_static_degree_cache
+from repro.core.async_engine import lcc_pipelined
+from repro.core.tric_baseline import tric_problem
+
+g = rmat_graph(11, 8, seed=0)
+out = []
+for p in (2, 4, 8):
+    row = {"p": p}
+    for label, kw in (
+        ("async", dict(n_rounds=4)),
+        ("async_cached", dict(n_rounds=4,
+                              cache=build_static_degree_cache(g.degrees, 256))),
+    ):
+        prob = build_sharded_problem(g, p, **kw)
+        t, lcc = lcc_pipelined(prob)  # compile+warm
+        t0 = time.perf_counter()
+        for _ in range(3):
+            t, lcc = lcc_pipelined(prob)
+        row[label] = (time.perf_counter() - t0) / 3
+    prob = tric_problem(g, p)
+    t, lcc = lcc_pipelined(prob)
+    t0 = time.perf_counter()
+    for _ in range(3):
+        t, lcc = lcc_pipelined(prob)
+    row["tric_bsp"] = (time.perf_counter() - t0) / 3
+    out.append(row)
+print(json.dumps(out))
+"""
+
+
+def measured():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", MEASURE_SCRIPT],
+                       capture_output=True, text=True, env=env, timeout=900)
+    if r.returncode != 0:
+        return {"error": r.stderr[-1000:]}
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def run(quick: bool = True):
+    return {
+        "modeled": modeled(quick),
+        "measured_8hostdev": measured(),
+        "paper_ref": "Figs. 9/10",
+    }
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

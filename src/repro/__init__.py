@@ -1,0 +1,16 @@
+"""repro: Asynchronous distributed-memory TC/LCC with RMA caching, on JAX.
+
+Framework layout:
+  core/         the paper's algorithms (CSR, 1D partition, intersection,
+                RMA pull schedule, CLaMPI cache, async engine, TriC baseline)
+  graphs/       graph data pipeline (R-MAT, power-law stand-ins, sampler)
+  models/       assigned architectures (LM transformers, GNNs, recsys)
+  data/         token/recsys synthetic pipelines
+  train/serve/  training and serving substrates
+  distributed/  sharding rules, fault tolerance, hub-replication gather
+  kernels/      Pallas TPU kernels (+ jnp oracles)
+  configs/      one config per assigned architecture
+  launch/       mesh, dry-run, train/serve entry points
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,1 @@
+from .registry import get_arch, list_archs, ARCHS  # noqa: F401

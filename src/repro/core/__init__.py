@@ -1,0 +1,1 @@
+from . import csr, partition, intersect, triangles, cache, rma, lcc  # noqa: F401

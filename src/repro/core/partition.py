@@ -1,0 +1,91 @@
+"""1D vertex partitioning (paper §III-A).
+
+``V_k = { v_i : i in ((k-1)n/p, k*n/p] }`` — contiguous equal-size blocks.
+We generalize to ``p`` not dividing ``n`` with ceil-sized blocks so that the
+owner function stays a closed form (needed device-side).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from .csr import CSRGraph
+
+__all__ = ["Partition1D", "partition_1d", "local_block"]
+
+
+@dataclasses.dataclass
+class Partition1D:
+    n: int
+    p: int
+
+    @property
+    def block(self) -> int:
+        return -(-self.n // self.p)  # ceil
+
+    def owner(self, v):
+        """Owner process of vertex v (vectorized)."""
+        return np.minimum(
+            np.asarray(v, np.int64) // self.block, self.p - 1
+        ).astype(np.int32)
+
+    def lo(self, k: int) -> int:
+        return min(k * self.block, self.n)
+
+    def hi(self, k: int) -> int:
+        return min((k + 1) * self.block, self.n)
+
+    def sizes(self) -> np.ndarray:
+        return np.array(
+            [self.hi(k) - self.lo(k) for k in range(self.p)], np.int64
+        )
+
+
+def partition_1d(n: int, p: int) -> Partition1D:
+    return Partition1D(n=n, p=p)
+
+
+@dataclasses.dataclass
+class LocalBlock:
+    """Process-local CSR slab: rows [lo, hi) of the global CSR.
+
+    ``offsets`` is re-based to 0; adjacency ids stay GLOBAL (remote reads
+    need global ids — paper Fig. 2 stores global ids too).
+    """
+
+    rank: int
+    lo: int
+    hi: int
+    offsets: np.ndarray  # [hi-lo+1] int64, local base
+    adjacencies: np.ndarray  # int32 global ids
+
+    @property
+    def n_local(self) -> int:
+        return self.hi - self.lo
+
+    def row(self, v_global: int) -> np.ndarray:
+        v = v_global - self.lo
+        return self.adjacencies[self.offsets[v] : self.offsets[v + 1]]
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.offsets)
+
+
+def local_block(csr: CSRGraph, part: Partition1D, rank: int) -> LocalBlock:
+    lo, hi = part.lo(rank), part.hi(rank)
+    a, b = csr.offsets[lo], csr.offsets[hi]
+    return LocalBlock(
+        rank=rank,
+        lo=lo,
+        hi=hi,
+        offsets=(csr.offsets[lo : hi + 1] - a).astype(np.int64),
+        adjacencies=csr.adjacencies[a:b].copy(),
+    )
+
+
+def all_blocks(csr: CSRGraph, p: int) -> List[LocalBlock]:
+    part = partition_1d(csr.n, p)
+    return [local_block(csr, part, k) for k in range(p)]

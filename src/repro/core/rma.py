@@ -1,0 +1,360 @@
+"""RMA-style remote-read machinery (paper §III-A/B) adapted to XLA SPMD.
+
+The paper reads remote adjacency lists with MPI one-sided gets over two
+windows (``w_offsets`` and ``w_adj``). XLA has no one-sided get, so the
+remote-read pattern is compiled into a **static pull schedule**:
+
+- Host-side preprocessing walks each device's edge worklist, resolves every
+  remote endpoint against the static degree cache, dedups within a round
+  (the within-epoch reuse CLaMPI also captures), and emits, per round, a
+  *serve list*: which of its local rows each device must ship to each peer.
+- Device-side, one ``all_to_all`` per round moves exactly those rows; the
+  pipelined engine overlaps round ``r``'s intersection with round
+  ``r+1``'s fetch (the paper's double buffering, §III-A).
+
+This module builds the schedule + stacked device arrays; the compiled
+engine lives in ``async_engine.py``. A host-level trace simulator
+(``simulate_rma_lcc``) replays the same access stream through the
+``ClampiCache`` simulator to produce the paper's cache/communication
+metrics (Figs. 4, 7, 8, 9, 10) without needing p physical devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .cache import CacheStats, ClampiCache, NetworkModel, StaticDegreeCache
+from .csr import CSRGraph, to_padded_rows
+from .partition import Partition1D, partition_1d
+
+__all__ = [
+    "ShardedLCCProblem",
+    "build_sharded_problem",
+    "RMATraceStats",
+    "simulate_rma_lcc",
+]
+
+OFFSET_ENTRY_BYTES = 8  # (start, end) pair of int32 — paper §IV-D2
+ID_BYTES = 4
+
+
+@dataclasses.dataclass
+class ShardedLCCProblem:
+    """Stacked per-device arrays (leading axis p) + static metadata.
+
+    Combined row-index space per round (per device):
+      [0, n_loc+1)                         local rows (+1 phantom at n_loc)
+      [n_loc+1, n_loc+1+C)                 replicated cache rows
+      [n_loc+1+C, n_loc+1+C+p*S_max)       this round's fetched rows
+    """
+
+    # device data (leading axis p)
+    rows_ext: np.ndarray  # [p, n_loc+1, W] int32 global ids, sentinel = n
+    degrees: np.ndarray  # [p, n_loc] int32 true degrees
+    edge_u: np.ndarray  # [p, E_max] int32 local u index (pad -> n_loc)
+    edge_vc: np.ndarray  # [p, E_max] int32 combined row index of v
+    edge_mask: np.ndarray  # [p, E_max] bool
+    serve_idx: np.ndarray  # [p, NR, p, S_max] int32 local rows to send
+    cache_rows: np.ndarray  # [C, W] int32 (replicated)
+    # metadata
+    n: int
+    p: int
+    width: int
+    n_loc: int
+    e_max: int
+    n_rounds: int
+    s_max: int
+    cache_ids: np.ndarray  # [C] global ids
+
+    @property
+    def sentinel(self) -> int:
+        return self.n
+
+    def comm_bytes_per_round(self) -> np.ndarray:
+        """[p, NR] payload bytes each device *receives* per round."""
+        # serve_idx[q, r, k] = rows q sends to k; received-by-k = sum over q
+        valid = self.serve_idx < self.n_loc
+        per = valid.sum(axis=-1) * self.width * ID_BYTES  # [p(send), NR, p(dst)]
+        return per.transpose(2, 1, 0).sum(axis=-1)  # [p(dst), NR]
+
+
+def _edge_worklist(
+    csr: CSRGraph, part: Partition1D, rank: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """(u_local, v_global) for every edge owned by ``rank``."""
+    lo, hi = part.lo(rank), part.hi(rank)
+    a, b = csr.offsets[lo], csr.offsets[hi]
+    deg = np.diff(csr.offsets[lo : hi + 1])
+    u_local = np.repeat(np.arange(hi - lo, dtype=np.int32), deg)
+    v_global = csr.adjacencies[a:b].astype(np.int64)
+    return u_local, v_global
+
+
+def build_sharded_problem(
+    csr: CSRGraph,
+    p: int,
+    *,
+    n_rounds: int = 4,
+    cache: Optional[StaticDegreeCache] = None,
+    width: Optional[int] = None,
+    dedup_rounds: bool = True,
+) -> ShardedLCCProblem:
+    """Compile the static pull schedule for a p-way 1D partition."""
+    part = partition_1d(csr.n, p)
+    n_loc = part.block
+    w = int(width if width is not None else max(csr.max_degree, 1))
+    sent = csr.n
+    cache_ids = (
+        cache.vertex_ids if cache is not None else np.zeros((0,), np.int64)
+    )
+    c = cache_ids.shape[0]
+
+    # local padded rows (+ phantom row) and true degrees, per device
+    rows_ext = np.full((p, n_loc + 1, w), sent, np.int32)
+    degrees = np.zeros((p, n_loc), np.int32)
+    deg_all = csr.degrees
+    for k in range(p):
+        lo, hi = part.lo(k), part.hi(k)
+        if hi > lo:
+            vs = np.arange(lo, hi)
+            rows_ext[k, : hi - lo] = to_padded_rows(
+                csr, w, sentinel=sent, vertices=vs
+            )
+            degrees[k, : hi - lo] = deg_all[lo:hi]
+
+    cache_rows = (
+        to_padded_rows(csr, w, sentinel=sent, vertices=cache_ids)
+        if c
+        else np.zeros((0, w), np.int32)
+    )
+    cache_slot_of = (
+        cache.slot_of if cache is not None else (lambda v: np.full(len(v), -1, np.int32))
+    )
+
+    # per-device worklists + per-round fetch sets
+    works = [_edge_worklist(csr, part, k) for k in range(p)]
+    e_max = max((u.size for u, _ in works), default=1) or 1
+    n_rounds = max(1, min(n_rounds, e_max))
+    e_chunk = -(-e_max // n_rounds)
+    e_max = e_chunk * n_rounds  # pad to a whole number of equal chunks
+
+    # first pass: compute per (initiator, round, owner) request lists
+    # requests[k][r][q] = list of local row indices on q (order of first use)
+    requests: List[List[Dict[int, List[int]]]] = [
+        [dict() for _ in range(n_rounds)] for _ in range(p)
+    ]
+    # remember, per edge, how to find its row: (source, index)
+    edge_src_kind = [np.zeros(e_max, np.int8) for _ in range(p)]  # 0 loc 1 cache 2 fetch
+    edge_src_idx = [np.zeros(e_max, np.int64) for _ in range(p)]
+    for k in range(p):
+        u_l, v_g = works[k]
+        owners = part.owner(v_g)
+        slots = cache_slot_of(v_g)
+        pos_maps: List[Dict[Tuple[int, int], int]] = [
+            dict() for _ in range(n_rounds)
+        ]
+        for e in range(v_g.size):
+            r = e // e_chunk
+            v = int(v_g[e])
+            if owners[e] == k:
+                edge_src_kind[k][e] = 0
+                edge_src_idx[k][e] = v - part.lo(k)
+            elif slots[e] >= 0:
+                edge_src_kind[k][e] = 1
+                edge_src_idx[k][e] = slots[e]
+            else:
+                q = int(owners[e])
+                lst = requests[k][r].setdefault(q, [])
+                v_local = v - part.lo(q)
+                key = (q, v_local)
+                pm = pos_maps[r]
+                if dedup_rounds and key in pm:
+                    pos = pm[key]
+                else:
+                    pos = len(lst)
+                    lst.append(v_local)
+                    pm[key] = pos
+                edge_src_kind[k][e] = 2
+                edge_src_idx[k][e] = q * 10**9 + pos  # resolved after S_max known
+
+    s_max = 1
+    for k in range(p):
+        for r in range(n_rounds):
+            for q, lst in requests[k][r].items():
+                s_max = max(s_max, len(lst))
+
+    # serve lists: serve_idx[q, r, k] = rows q sends to k in round r
+    serve_idx = np.full((p, n_rounds, p, s_max), n_loc, np.int32)
+    for k in range(p):
+        for r in range(n_rounds):
+            for q, lst in requests[k][r].items():
+                serve_idx[q, r, k, : len(lst)] = lst
+
+    # finalize combined indices
+    base_cache = n_loc + 1
+    base_fetch = n_loc + 1 + c
+    edge_u = np.full((p, e_max), n_loc, np.int32)
+    edge_vc = np.full((p, e_max), n_loc, np.int32)  # phantom
+    edge_mask = np.zeros((p, e_max), bool)
+    for k in range(p):
+        u_l, v_g = works[k]
+        ne = u_l.size
+        edge_u[k, :ne] = u_l
+        edge_mask[k, :ne] = True
+        kind = edge_src_kind[k]
+        idx = edge_src_idx[k]
+        vc = np.full(e_max, n_loc, np.int64)
+        loc = kind == 0
+        vc[: ne][loc[:ne]] = idx[:ne][loc[:ne]]
+        cch = kind == 1
+        vc[: ne][cch[:ne]] = base_cache + idx[:ne][cch[:ne]]
+        ftc = kind == 2
+        q = idx // 10**9
+        pos = idx % 10**9
+        vc[: ne][ftc[:ne]] = base_fetch + (q * s_max + pos)[:ne][ftc[:ne]]
+        edge_vc[k] = vc.astype(np.int32)
+
+    return ShardedLCCProblem(
+        rows_ext=rows_ext,
+        degrees=degrees,
+        edge_u=edge_u,
+        edge_vc=edge_vc,
+        edge_mask=edge_mask,
+        serve_idx=serve_idx,
+        cache_rows=cache_rows,
+        n=csr.n,
+        p=p,
+        width=w,
+        n_loc=n_loc,
+        e_max=e_max,
+        n_rounds=n_rounds,
+        s_max=s_max,
+        cache_ids=cache_ids,
+    )
+
+
+# --------------------------------------------------------------------------
+# Host trace simulator: replays the RMA access stream through ClampiCache.
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class RMATraceStats:
+    """Per-device communication statistics for one LCC computation."""
+
+    remote_gets: np.ndarray  # [p] int64 — adjacency gets issued (pre-cache)
+    remote_reads_unique: np.ndarray  # [p]
+    comm_time: np.ndarray  # [p] float — modeled, caches applied
+    compute_edges: np.ndarray  # [p]
+    remote_bytes: np.ndarray = None  # [p] bytes fetched AFTER caching
+    remote_bytes_raw: np.ndarray = None  # [p] bytes demanded (pre-cache)
+    post_cache_gets: np.ndarray = None  # [p] gets that miss the caches
+    offsets_stats: List[CacheStats] = dataclasses.field(default_factory=list)
+    adj_stats: List[CacheStats] = dataclasses.field(default_factory=list)
+
+    @property
+    def makespan(self) -> float:
+        return float(self.comm_time.max()) if self.comm_time.size else 0.0
+
+
+def simulate_rma_lcc(
+    csr: CSRGraph,
+    p: int,
+    *,
+    offsets_cache_bytes: int = 0,
+    adj_cache_bytes: int = 0,
+    use_degree_score: bool = False,
+    network: Optional[NetworkModel] = None,
+    table_slots_offsets: Optional[int] = None,
+    table_slots_adj: Optional[int] = None,
+    positional_weight: float = 0.5,
+) -> RMATraceStats:
+    """Replay the per-device remote-access stream of Algorithm 3.
+
+    Each remote adjacency read = one get on w_offsets (8 B) + one get on
+    w_adj (deg * 4 B), both cached when cache bytes > 0 (always-cache
+    mode). ``use_degree_score`` switches the adjacency cache's victim
+    selection to the paper's application-defined degree score.
+    """
+    net = network or NetworkModel()
+    part = partition_1d(csr.n, p)
+    deg = csr.degrees
+    remote_gets = np.zeros(p, np.int64)
+    uniq = np.zeros(p, np.int64)
+    comm = np.zeros(p, np.float64)
+    edges = np.zeros(p, np.int64)
+    bytes_after = np.zeros(p, np.int64)
+    bytes_raw = np.zeros(p, np.int64)
+    gets_after = np.zeros(p, np.int64)
+    o_stats: List[CacheStats] = []
+    a_stats: List[CacheStats] = []
+    for k in range(p):
+        u_l, v_g = _edge_worklist(csr, part, k)
+        owners = part.owner(v_g)
+        remote = v_g[owners != k]
+        remote_gets[k] = remote.size
+        uniq[k] = np.unique(remote).size
+        edges[k] = v_g.size
+        c_off = (
+            ClampiCache(
+                offsets_cache_bytes,
+                table_slots_offsets
+                or max(1, offsets_cache_bytes // OFFSET_ENTRY_BYTES),
+                network=net,
+                positional_weight=positional_weight,
+            )
+            if offsets_cache_bytes > 0
+            else None
+        )
+        # hash-table sizing heuristic of §III-B1: n * 0.5**alpha with alpha=2
+        default_adj_slots = max(1, int(csr.n * 0.25))
+        c_adj = (
+            ClampiCache(
+                adj_cache_bytes,
+                table_slots_adj or default_adj_slots,
+                network=net,
+                positional_weight=positional_weight,
+            )
+            if adj_cache_bytes > 0
+            else None
+        )
+        t = 0.0
+        for v in remote:
+            v = int(v)
+            size_adj = int(deg[v]) * ID_BYTES
+            score = float(deg[v]) if use_degree_score else None
+            bytes_raw[k] += OFFSET_ENTRY_BYTES + size_adj
+            if c_off is not None:
+                if not c_off.get(v, OFFSET_ENTRY_BYTES):
+                    bytes_after[k] += OFFSET_ENTRY_BYTES
+                    gets_after[k] += 1
+            else:
+                t += net.remote(OFFSET_ENTRY_BYTES)
+                bytes_after[k] += OFFSET_ENTRY_BYTES
+                gets_after[k] += 1
+            if c_adj is not None:
+                if not c_adj.get(v, size_adj, score=score):
+                    bytes_after[k] += size_adj
+                    gets_after[k] += 1
+            else:
+                t += net.remote(size_adj)
+                bytes_after[k] += size_adj
+                gets_after[k] += 1
+        if c_off is not None:
+            t += c_off.stats.comm_time
+            o_stats.append(c_off.stats)
+        if c_adj is not None:
+            t += c_adj.stats.comm_time
+            a_stats.append(c_adj.stats)
+        comm[k] = t
+    return RMATraceStats(
+        remote_gets=remote_gets,
+        remote_reads_unique=uniq,
+        comm_time=comm,
+        compute_edges=edges,
+        remote_bytes=bytes_after,
+        remote_bytes_raw=bytes_raw,
+        post_cache_gets=gets_after,
+        offsets_stats=o_stats,
+        adj_stats=a_stats,
+    )

@@ -1,0 +1,1 @@
+from . import tokens, recsys  # noqa: F401

@@ -1,0 +1,1 @@
+from . import sharding, hub_gather, fault_tolerance  # noqa: F401

@@ -1,0 +1,62 @@
+"""Hub-replication gather: the paper's degree-score cache applied beyond
+LCC — to distributed GNN feature reads and recsys hot-row lookups.
+
+Idea (paper §III-B, Observations 3.1/3.2): access frequency of a row is
+power-law in its degree/popularity, so replicating the top-C hottest rows
+on every device removes the bulk of cross-shard traffic; the remaining
+cold rows go through the ordinary sharded gather (XLA lowers it to
+all-gather / a2a). The split is *static* (degree/popularity is known
+offline), so the compiled program contains two plain gathers and a select
+— no data-dependent shapes.
+
+``split_hot_cold`` is the host-side planner; ``hub_gather`` the device op.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["HotColdPlan", "split_hot_cold", "hub_gather"]
+
+
+class HotColdPlan(NamedTuple):
+    hot_ids: np.ndarray  # [C] sorted global ids replicated on all devices
+    # per-index remap (precomputed on host for a static id stream):
+    is_hot: np.ndarray  # [N_idx] bool
+    hot_pos: np.ndarray  # [N_idx] slot into the hot table (junk if cold)
+
+
+def split_hot_cold(ids: np.ndarray, scores: np.ndarray, capacity: int) -> HotColdPlan:
+    """Pick the top-``capacity`` rows by score (degree / popularity) and
+    classify a static id stream against them."""
+    n_rows = scores.shape[0]
+    c = min(capacity, n_rows)
+    hot = np.sort(np.argpartition(scores, n_rows - c)[n_rows - c:]) if c > 0 \
+        else np.zeros((0,), np.int64)
+    pos = np.searchsorted(hot, ids)
+    pos = np.minimum(pos, max(c - 1, 0))
+    is_hot = c > 0 and hot.size > 0
+    hit = hot[pos] == ids if hot.size else np.zeros(ids.shape, bool)
+    return HotColdPlan(hot_ids=hot.astype(np.int64),
+                       is_hot=hit,
+                       hot_pos=pos.astype(np.int32))
+
+
+def hub_gather(
+    table: jnp.ndarray,      # [N, D] sharded over rows
+    hot_table: jnp.ndarray,  # [C, D] replicated
+    ids: jnp.ndarray,        # [K] int32 row ids
+    is_hot: jnp.ndarray,     # [K] bool   (static plan, device-resident)
+    hot_pos: jnp.ndarray,    # [K] int32
+) -> jnp.ndarray:
+    """rows[i] = hot_table[hot_pos[i]] if is_hot[i] else table[ids[i]].
+
+    The cold gather is pointed at row 0 for hot ids (cheap, avoids the
+    cross-shard traffic for them under GSPMD's gather partitioning).
+    """
+    cold_ids = jnp.where(is_hot, 0, ids)
+    cold = jnp.take(table, cold_ids, axis=0)
+    hot = jnp.take(hot_table, hot_pos, axis=0)
+    return jnp.where(is_hot[:, None], hot, cold)

@@ -1,0 +1,83 @@
+"""Per-family sharding rules against the production mesh axes.
+
+The production mesh is ('data', 'model') single-pod or
+('pod', 'data', 'model') multi-pod (launch/mesh.py). Rules:
+
+- LM      : batch -> (pod, data); heads/d_ff/vocab/experts -> model
+- GNN     : nodes 1D-partitioned (the paper's scheme) + edges sharded over
+            the flattened (pod, data, model) axis; features unsharded
+- recsys  : batch -> (pod, data); embedding-table rows -> model
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.transformer import AxisRules
+
+__all__ = ["rules_for_mesh", "lm_rules", "gnn_specs", "recsys_specs",
+           "named", "flat_axes"]
+
+
+def flat_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def lm_rules(mesh: Mesh) -> AxisRules:
+    names = mesh.axis_names
+    data = tuple(a for a in names if a in ("pod", "data"))
+    model = tuple(a for a in names if a == "model")
+    return AxisRules(data=data, model=model)
+
+
+def rules_for_mesh(mesh: Mesh) -> AxisRules:
+    return lm_rules(mesh)
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def gnn_specs(mesh: Mesh) -> dict:
+    """Input specs for a GNN batch dict: edges over everything, nodes over
+    the data axes (1D partition), small tensors replicated."""
+    all_ax = flat_axes(mesh)
+    data = tuple(a for a in all_ax if a in ("pod", "data"))
+    return {
+        "node_feat": P(data, None),
+        "positions": P(data, None),
+        "node_mask": P(data),
+        "edge_src": P(all_ax),
+        "edge_dst": P(all_ax),
+        "edge_mask": P(all_ax),
+        "edge_src_cold": P(all_ax),
+        "edge_src_hub_pos": P(all_ax),
+        "edge_dst_cold": P(all_ax),
+        "edge_dst_hot": P(all_ax),
+        "edge_mask_cold": P(all_ax),
+        "edge_mask_hot": P(all_ax),
+        "hub_ids": P(),  # replicated hub id table (the degree-score cache)
+        "graph_ids": P(data),
+        "labels": P(),
+        "label_mask": P(),
+    }
+
+
+def recsys_specs(mesh: Mesh) -> dict:
+    all_ax = flat_axes(mesh)
+    data = tuple(a for a in all_ax if a in ("pod", "data"))
+    b = P(data)
+    b2 = P(data, None)
+    return {
+        "hist_items": b2,
+        "hist_cats": b2,
+        "hist_mask": b2,
+        "target_item": b,
+        "target_cat": b,
+        "user_profile": b2,
+        "label": b,
+        "cand_items": P(all_ax),
+        "cand_cats": P(all_ax),
+    }

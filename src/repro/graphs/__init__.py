@@ -1,0 +1,1 @@
+from . import rmat, datasets, sampler  # noqa: F401

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: bitmap AND + popcount intersection counting.
+
+The dense-community regime of the hybrid (paper §III-C adapted): rows are
+pre-packed into uint32 bitmap words over a vertex window; the kernel ANDs
+the word streams and popcounts — O(n/32) vector int ops per edge
+regardless of degree skew.
+
+  grid: (E / BLOCK_E,)
+  in:   words_a [BLOCK_E, W] u32, words_b [BLOCK_E, W] u32  (VMEM)
+  out:  counts [BLOCK_E] i32
+
+Popcount is the classic SWAR bit-slice (no dependence on a popcount
+intrinsic — add/shift/and only, all VPU-native).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["bitmap_intersect_count"]
+
+
+def _popcount_u32(x: jnp.ndarray) -> jnp.ndarray:
+    """SWAR popcount on uint32 lanes."""
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def _kernel(wa_ref, wb_ref, counts_ref):
+    both = jnp.bitwise_and(wa_ref[...], wb_ref[...])  # [BE, W] u32
+    counts_ref[...] = _popcount_u32(both).sum(axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_e", "interpret"))
+def bitmap_intersect_count(
+    words_a: jnp.ndarray,  # [E, W] uint32
+    words_b: jnp.ndarray,  # [E, W] uint32
+    *,
+    block_e: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    e, w = words_a.shape
+    assert e % block_e == 0, (e, block_e)
+    return pl.pallas_call(
+        _kernel,
+        grid=(e // block_e,),
+        in_specs=[
+            pl.BlockSpec((block_e, w), lambda i: (i, 0)),
+            pl.BlockSpec((block_e, w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_e,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((e,), jnp.int32),
+        interpret=interpret,
+    )(words_a, words_b)

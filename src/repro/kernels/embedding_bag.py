@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: EmbeddingBag (gather + masked reduce).
+
+The recsys hot path (taxonomy §RecSys): bags of ids gather rows from a
+large table and reduce. TPU-natively the table stays in HBM/ANY and rows
+stream through VMEM via dynamic-slice loads driven by **scalar-prefetched
+ids** (the ids must be readable at tile-schedule time — this is the
+Pallas idiom for data-dependent gathers).
+
+  grid: (B / BLOCK_B,)
+  scalar-prefetch: ids [B, L] i32, weights-mask [B, L] f32
+  in:   table [N, D] (ANY/HBM — sliced manually)
+  out:  pooled [BLOCK_B, D] f32 (VMEM)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["embedding_bag"]
+
+
+def _kernel(ids_ref, w_ref, table_ref, out_ref, *, block_b: int, bag: int):
+    i = pl.program_id(0)
+    d = out_ref.shape[-1]
+    acc = jnp.zeros((block_b, d), jnp.float32)
+    for bi in range(block_b):
+        row_acc = jnp.zeros((1, d), jnp.float32)
+        for li in range(bag):
+            idx = ids_ref[i * block_b + bi, li]
+            w = w_ref[i * block_b + bi, li]
+            row = table_ref[pl.dslice(idx, 1), :]
+            row_acc = row_acc + w * row.astype(jnp.float32)
+        acc = acc.at[bi].set(row_acc[0])
+    out_ref[...] = acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "block_b", "interpret")
+)
+def embedding_bag(
+    table: jnp.ndarray,  # [N, D] float
+    ids: jnp.ndarray,  # [B, L] int32
+    mask: jnp.ndarray,  # [B, L] bool
+    *,
+    mode: str = "sum",
+    block_b: int = 8,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, l = ids.shape
+    n, d = table.shape
+    assert b % block_b == 0, (b, block_b)
+    w = mask.astype(jnp.float32)
+    if mode == "mean":
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1.0)
+    elif mode != "sum":
+        raise ValueError(mode)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b // block_b,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec((block_b, d), lambda i, *_: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, block_b=block_b, bag=l),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        interpret=interpret,
+    )(ids, w, table)

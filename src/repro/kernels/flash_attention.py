@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: blocked (flash) attention with online softmax.
+
+LM hot path. Heads are pre-folded into the leading batch dim by the ops
+wrapper (GQA grouping handled there), so the kernel sees:
+
+  q [B, S, dh], k [B, T, dh], v [B, T, dh]  ->  out [B, S, dh]
+
+  grid: (B, S/BQ, T/BK) — innermost axis sequential over KV blocks;
+  VMEM scratch carries (m, l, acc) across KV steps (the online softmax);
+  causal / sliding-window blocks wholly outside the mask are skipped with
+  @pl.when (the structural analogue of the paper's "don't fetch rows you
+  won't read").
+
+Supports gemma2's attn-logit softcap. Validated in interpret mode against
+models/attention.flash_attention_jnp (itself pinned to the dense oracle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+            scale, causal, window, softcap, bq, bk, n_k):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q_lo = qi * bq
+    k_lo = ki * bk
+    # static-shape mask bounds; skip blocks fully outside causal/window
+    live = True
+    if causal:
+        live = jnp.asarray(k_lo <= q_lo + bq - 1)
+    if window > 0:
+        live = jnp.logical_and(live, k_lo + bk - 1 >= q_lo - window + 1)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale  # [BQ, dh]
+        k = k_ref[0].astype(jnp.float32)  # [BK, dh]
+        s = q @ k.T  # [BQ, BK]
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        qp = q_lo + jax.lax.iota(jnp.int32, bq)[:, None]
+        kp = k_lo + jax.lax.iota(jnp.int32, bk)[None, :]
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, kp <= qp)
+        if window > 0:
+            mask = jnp.logical_and(mask, (qp - kp) < window)
+        s = jnp.where(mask, s, NEG)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * alpha + p.sum(-1)
+        acc_sc[...] = acc_sc[...] * alpha[:, None] + p @ v_ref[0].astype(
+            jnp.float32
+        )
+        m_sc[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _flush():
+        denom = jnp.maximum(l_sc[...], 1e-30)
+        o_ref[0] = (acc_sc[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "causal", "window", "softcap", "block_q",
+                     "block_k", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,  # [B, S, dh] (heads folded into B)
+    k: jnp.ndarray,  # [B, T, dh]
+    v: jnp.ndarray,  # [B, T, dh]
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, s, dh = q.shape
+    t = k.shape[1]
+    bq, bk = min(block_q, s), min(block_k, t)
+    assert s % bq == 0 and t % bk == 0
+    n_q, n_k = s // bq, t // bk
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, softcap=softcap,
+        bq=bq, bk=bk, n_k=n_k,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(b, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b_, i, j: (b_, i, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b_, i, j: (b_, j, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b_, i, j: (b_, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda b_, i, j: (b_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

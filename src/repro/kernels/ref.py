@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the per-kernel ref.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "intersect_count_ref",
+    "bitmap_intersect_count_ref",
+    "embedding_bag_ref",
+    "segment_sum_sorted_ref",
+    "flash_attention_ref",
+]
+
+
+def intersect_count_ref(rows_a, rows_b, *, sentinel: int):
+    eq = rows_a[:, :, None] == rows_b[:, None, :]
+    eq = eq & (rows_a[:, :, None] < sentinel)
+    return eq.sum(axis=(1, 2)).astype(jnp.int32)
+
+
+def bitmap_intersect_count_ref(words_a, words_b):
+    both = jnp.bitwise_and(words_a, words_b)
+    return jax.lax.population_count(both).sum(axis=-1).astype(jnp.int32)
+
+
+def embedding_bag_ref(table, ids, mask, *, mode: str = "sum"):
+    emb = jnp.take(table, ids, axis=0).astype(jnp.float32)  # [B, L, D]
+    w = mask.astype(jnp.float32)
+    if mode == "mean":
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1.0)
+    return (emb * w[..., None]).sum(axis=1)
+
+
+def segment_sum_sorted_ref(values, seg_ids, *, num_segments: int):
+    return jax.ops.segment_sum(values, seg_ids, num_segments=num_segments)
+
+
+def flash_attention_ref(q, k, v, *, scale, causal=True, window=0,
+                        softcap=0.0):
+    """Dense attention on folded-head layout [B, S, dh] / [B, T, dh]."""
+    s = q.shape[1]
+    t = k.shape[1]
+    srs = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32) * scale,
+                     k.astype(jnp.float32))
+    if softcap > 0:
+        srs = softcap * jnp.tanh(srs / softcap)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kp <= qp
+    if window > 0:
+        mask &= (qp - kp) < window
+    srs = jnp.where(mask[None], srs, -1e30)
+    w = jax.nn.softmax(srs, axis=-1)
+    return jnp.einsum("bst,btd->bsd", w, v.astype(jnp.float32)).astype(q.dtype)

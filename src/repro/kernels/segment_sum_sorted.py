@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: segment-sum over SORTED segment ids.
+
+The GNN message-passing reduction (edges sorted by destination — the
+layout the 1D-partition preprocessing produces). Each program owns an
+edge block and accumulates into the output via a one-hot matmul
+(MXU-friendly scatter substitute):
+
+  grid: (E / BLOCK_E,)   — sequential; output revisited across steps
+  in:   values [BLOCK_E, D] f32, seg_ids [BLOCK_E] i32
+  out:  out [N, D] f32 (single block; accumulated with @pl.when init)
+
+The one-hot trick: partial[n, d] = sum_e (seg_ids[e] == n) * values[e, d]
+— a [N_BLOCK, BLOCK_E] x [BLOCK_E, D] matmul on the MXU instead of a
+serial scatter. N is tiled in chunks of ROWS to bound the one-hot tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["segment_sum_sorted"]
+
+
+def _kernel(vals_ref, seg_ref, out_ref, *, n: int, rows: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    vals = vals_ref[...]  # [BE, D]
+    seg = seg_ref[...]  # [BE]
+    for lo in range(0, n, rows):
+        hi = min(lo + rows, n)
+        onehot = (
+            seg[None, :] == (lo + jax.lax.iota(jnp.int32, hi - lo))[:, None]
+        ).astype(vals.dtype)  # [ROWS, BE]
+        out_ref[lo:hi, :] += onehot @ vals
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_segments", "block_e", "rows", "interpret")
+)
+def segment_sum_sorted(
+    values: jnp.ndarray,  # [E, D] float
+    seg_ids: jnp.ndarray,  # [E] int32, sorted ascending (padding -> N)
+    *,
+    num_segments: int,
+    block_e: int = 512,
+    rows: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    e, d = values.shape
+    assert e % block_e == 0, (e, block_e)
+    return pl.pallas_call(
+        functools.partial(_kernel, n=num_segments, rows=rows),
+        grid=(e // block_e,),
+        in_specs=[
+            pl.BlockSpec((block_e, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((num_segments, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_segments, d), values.dtype),
+        interpret=interpret,
+    )(values, seg_ids)

@@ -1,0 +1,220 @@
+"""Collective-byte + loop-corrected FLOP census over partitioned HLO text.
+
+``compiled.cost_analysis()`` (a) does not report collective traffic and
+(b) visits each instruction ONCE — while-loop bodies (how XLA lowers
+``lax.scan`` over layers / microbatches) are not multiplied by their trip
+count (verified empirically: an 8-step scan reports 1/8 the FLOPs of the
+unrolled loop). This module parses the compiled module text instead:
+
+- splits computations, builds the call graph (fusions `calls=`,
+  collectives `to_apply=`, `while` body/condition, conditional branches),
+- recovers while trip counts from the loop-condition constant,
+- multiplies per-computation op costs by execution multiplicity,
+- censuses collective bytes (largest operand/result tensor per op) and
+  analytic dot FLOPs (2 x result_elems x contracted_elems).
+
+Byte factors (documented in EXPERIMENTS.md §Roofline):
+  all-reduce 2x; all-gather / reduce-scatter / all-to-all /
+  collective-permute 1x.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["collective_census"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_NAME_TYPE_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _header_name(line: str) -> Optional[Tuple[str, bool]]:
+    s = line.strip()
+    if not s.endswith("{") or "->" not in s:
+        return None
+    is_entry = s.startswith("ENTRY")
+    if is_entry:
+        s = s[len("ENTRY"):].strip()
+    if not s.startswith("%"):
+        return None
+    name = s.split()[0].split("(")[0].lstrip("%")
+    return name, is_entry
+
+
+def _split_computations(text: str):
+    comps: Dict[str, List[str]] = {}
+    entry = None
+    cur = None
+    for line in text.splitlines():
+        h = _header_name(line)
+        if h is not None:
+            cur = h[0]
+            comps[cur] = []
+            if h[1]:
+                entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line.strip())
+    return comps, entry
+
+
+def collective_census(text: str) -> dict:
+    comps, entry = _split_computations(text)
+
+    # ---- call graph with while-trip multiplication ----
+    calls: Dict[str, List[Tuple[str, float]]] = defaultdict(list)
+    for name, lines in comps.items():
+        for ln in lines:
+            if "while(" in ln:
+                mb = re.search(r"body=%?([\w\.\-]+)", ln)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ln)
+                trip = 1
+                if mc and mc.group(1) in comps:
+                    consts = [
+                        int(c)
+                        for l2 in comps[mc.group(1)]
+                        for c in _CONST_RE.findall(l2)
+                    ]
+                    if consts:
+                        trip = max(consts)
+                if mb:
+                    calls[name].append((mb.group(1), float(max(trip, 1))))
+                if mc:
+                    calls[name].append((mc.group(1), 0.0))  # negligible
+                continue
+            for m in re.finditer(r"(?:calls|to_apply)=%?([\w\.\-]+)", ln):
+                calls[name].append((m.group(1), 1.0))
+            m = re.search(r"branch_computations=\{([^}]*)\}", ln)
+            if m:
+                for b in m.group(1).split(","):
+                    calls[name].append((b.strip().lstrip("%"), 1.0))
+
+    mult: Dict[str, float] = defaultdict(float)
+
+    def visit(name: str, m: float, depth=0):
+        if depth > 64 or name not in comps or m <= 0:
+            return
+        mult[name] += m
+        for child, k in calls.get(name, []):
+            visit(child, m * k, depth + 1)
+
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    if entry:
+        visit(entry, 1.0)
+
+    # ---- per-computation op census ----
+    per_op: Dict[str, dict] = {}
+    total_bytes = 0.0
+    weighted = 0.0
+    dot_flops = 0.0
+    max_trip = max([1.0] + [k for es in calls.values() for _, k in es])
+    for name, lines in comps.items():
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        types: Dict[str, str] = {}
+        for ln in lines:
+            nm = _NAME_TYPE_RE.match(ln)
+            if nm:
+                types[nm.group(1)] = nm.group(2)
+        for ln in lines:
+            hit = None
+            for op in COLLECTIVES:
+                if f" {op}(" in ln or ln.startswith(f"{op}("):
+                    # count -start, skip -done (avoid double counting async)
+                    if f"{op}-done" in ln:
+                        hit = "skip"
+                        break
+                    hit = op
+                    break
+            if hit == "skip":
+                continue
+            if hit is not None:
+                b = _shape_bytes(ln.split(" metadata=")[0])
+                factor = COLLECTIVES[hit]
+                d = per_op.setdefault(
+                    hit, {"count": 0.0, "bytes": 0.0, "weighted_bytes": 0.0}
+                )
+                d["count"] += m
+                d["bytes"] += b * m
+                d["weighted_bytes"] += b * m * factor
+                total_bytes += b * m
+                weighted += b * m * factor
+                continue
+            if " dot(" in ln:
+                dot_flops += _dot_flops(ln, types) * m
+    return {
+        "per_op": per_op,
+        "bytes": total_bytes,
+        "weighted_bytes": weighted,
+        "dot_flops": dot_flops,
+        "n_computations": len(comps),
+        "max_trip": max_trip,
+    }
+
+
+def _dims_of(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _dot_flops(ln: str, types: Dict[str, str]) -> float:
+    """2 * result_elems * prod(lhs contracting dims); operand shapes are
+    resolved through the per-computation name->type map."""
+    nm = _NAME_TYPE_RE.match(ln)
+    if not nm:
+        return 0.0
+    result_dims = _dims_of(nm.group(2))
+    result_elems = 1
+    for d in result_dims:
+        result_elems *= d
+    # operands: first parenthesized group after 'dot'
+    after = ln.split(" dot(", 1)[-1]
+    operands = after.split(")", 1)[0]
+    first = operands.split(",")[0].strip()
+    lhs_name = first.lstrip("%").split()[0] if first.startswith("%") else None
+    k = 1
+    contract = _LHS_CONTRACT_RE.search(ln)
+    if lhs_name and contract and lhs_name in types:
+        lhs_dims = _dims_of(types[lhs_name])
+        for ci in [int(c) for c in contract.group(1).split(",") if c]:
+            if ci < len(lhs_dims):
+                k *= lhs_dims[ci]
+    return 2.0 * result_elems * k

@@ -1,0 +1,30 @@
+"""Production meshes.
+
+Single pod: TPU v5e-256 as (data=16, model=16).
+Multi-pod:  2 pods = 512 chips as (pod=2, data=16, model=16); the 'pod'
+axis carries only data parallelism (gradient all-reduce crosses DCN).
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before first
+jax init; smoke tests must keep seeing 1 device).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "HW"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+class HW:
+    """TPU v5e-ish hardware constants for the roofline model."""
+
+    PEAK_FLOPS_BF16 = 197e12  # per chip
+    HBM_BW = 819e9  # bytes/s per chip
+    ICI_BW = 50e9  # bytes/s per link
+    HBM_BYTES = 16 << 30

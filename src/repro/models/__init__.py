@@ -1,0 +1,2 @@
+from . import common, transformer, moe  # noqa: F401
+from . import gnn, recsys  # noqa: F401

@@ -1,0 +1,163 @@
+"""Memory-efficient (flash-style) attention in pure jnp.
+
+Online-softmax over KV blocks, scanned over Q blocks — peak memory is one
+[B, K, G, block_q, block_k] score tile instead of the full [S, T] matrix
+(at 32k x 32k the dense tile would be ~0.5 TB/device; chunked it is tens
+of MB). This is the jnp oracle the Pallas flash kernel is validated
+against, and the long-sequence path of the transformer (> ``DENSE_CUTOFF``
+tokens).
+
+Supports causal masking, sliding windows (gemma2 local layers) and attn
+logit soft-capping. The sliding-window path *statically skips* KV blocks
+wholly outside the window via the inner fori_loop bounds — the paper-style
+"don't fetch what you won't read" trick applied to attention blocks
+(§Perf logs the win).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_jnp", "DENSE_CUTOFF"]
+
+DENSE_CUTOFF = 8192  # use the dense path below this many KV positions
+NEG = -1e30
+
+
+def flash_attention_jnp(
+    q: jnp.ndarray,  # [B, S, K, G, dh] (GQA-grouped)
+    k: jnp.ndarray,  # [B, T, K, dh]
+    v: jnp.ndarray,  # [B, T, K, dh]
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int = 0,  # 0 = global
+    softcap: float = 0.0,
+    block_q: int = 2048,
+    block_k: int = 2048,
+    q_offset: int = 0,  # global position of q[0] (for prefill chunks)
+    static_unroll: bool = False,
+) -> jnp.ndarray:
+    if static_unroll:
+        return _flash_static(q, k, v, scale=scale, causal=causal,
+                             window=window, softcap=softcap,
+                             block_q=block_q, block_k=block_k,
+                             q_offset=q_offset)
+    b, s, kh, g, dh = q.shape
+    t = k.shape[1]
+    bq = min(block_q, s)
+    bk = min(block_k, t)
+    assert s % bq == 0 and t % bk == 0, (s, t, bq, bk)
+    n_q, n_k = s // bq, t // bk
+
+    q = q.reshape(b, n_q, bq, kh, g, dh).transpose(1, 0, 3, 4, 2, 5)
+    # q_blocks: [n_q, B, K, G, bq, dh]
+    k_blocks = k.reshape(b, n_k, bk, kh, dh).transpose(1, 0, 3, 2, 4)
+    v_blocks = v.reshape(b, n_k, bk, kh, dh).transpose(1, 0, 3, 2, 4)
+    # k/v_blocks: [n_k, B, K, bk, dh]
+
+    def q_step(_, qi_qb):
+        qi, qb = qi_qb  # qb: [B, K, G, bq, dh]
+        q_lo = qi * bq + q_offset
+
+        def kv_step(ki, carry):
+            m, l, acc = carry
+            kb = jax.lax.dynamic_index_in_dim(k_blocks, ki, 0, keepdims=False)
+            vb = jax.lax.dynamic_index_in_dim(v_blocks, ki, 0, keepdims=False)
+            srs = jnp.einsum(
+                "bkgqd,bkcd->bkgqc",
+                qb.astype(jnp.float32) * scale,
+                kb.astype(jnp.float32),
+            )  # [B, K, G, bq, bk]
+            if softcap > 0:
+                srs = softcap * jnp.tanh(srs / softcap)
+            qpos = q_lo + jnp.arange(bq)[:, None]
+            kpos = ki * bk + jnp.arange(bk)[None, :]
+            mask = jnp.ones((bq, bk), bool)
+            if causal:
+                mask &= kpos <= qpos
+            if window > 0:
+                mask &= (qpos - kpos) < window
+            srs = jnp.where(mask, srs, NEG)
+            m_new = jnp.maximum(m, srs.max(-1))
+            p = jnp.exp(srs - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqc,bkcd->bkgqd", p, vb.astype(jnp.float32)
+            )
+            return m_new, l_new, acc_new
+
+        m0 = jnp.full((b, kh, g, bq), NEG, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, bq), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, bq, dh), jnp.float32)
+
+        # static KV-block bounds: causal upper bound; sliding-window lower
+        if causal or window > 0:
+            hi = jnp.minimum(
+                (q_lo + bq - 1) // bk + 1, n_k
+            ) if causal else n_k
+            lo = jnp.maximum((q_lo - window + 1) // bk, 0) if window > 0 else 0
+        else:
+            lo, hi = 0, n_k
+        m, l, acc = jax.lax.fori_loop(lo, hi, kv_step, (m0, l0, a0))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(n_q), q))
+    # outs: [n_q, B, K, G, bq, dh] -> [B, S, K, G, dh]
+    return outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, s, kh, g, dh)
+
+
+def _flash_static(q, k, v, *, scale, causal, window, softcap,
+                  block_q, block_k, q_offset):
+    """Fully static (python-unrolled) blocked attention: the KV-block
+    bounds per Q block are compile-time constants, so out-of-mask blocks
+    are NEVER built (vs lax.fori_loop's dynamic bounds, which also cannot
+    be reverse-differentiated — this is the TRAIN path)."""
+    b, s, kh, g, dh = q.shape
+    t = k.shape[1]
+    bq, bk = min(block_q, s), min(block_k, t)
+    assert s % bq == 0 and t % bk == 0, (s, t, bq, bk)
+    n_q, n_k = s // bq, t // bk
+    outs = []
+    for qi in range(n_q):
+        q_lo = qi * bq + q_offset
+        qb = q[:, qi * bq:(qi + 1) * bq].transpose(0, 2, 3, 1, 4)
+        # qb: [B, K, G, bq, dh]
+        lo = max((q_lo - window + 1) // bk, 0) if window > 0 else 0
+        hi = min((q_lo + bq - 1) // bk + 1, n_k) if causal else n_k
+        m = jnp.full((b, kh, g, bq), NEG, jnp.float32)
+        l = jnp.zeros((b, kh, g, bq), jnp.float32)
+        acc = jnp.zeros((b, kh, g, bq, dh), jnp.float32)
+        for ki in range(lo, hi):
+            kb = k[:, ki * bk:(ki + 1) * bk].transpose(0, 2, 1, 3)
+            vb = v[:, ki * bk:(ki + 1) * bk].transpose(0, 2, 1, 3)
+            srs = jnp.einsum(
+                "bkgqd,bkcd->bkgqc",
+                qb.astype(jnp.float32) * scale, kb.astype(jnp.float32),
+            )
+            if softcap > 0:
+                srs = softcap * jnp.tanh(srs / softcap)
+            qpos = q_lo + jnp.arange(bq)[:, None]
+            kpos = ki * bk + jnp.arange(bk)[None, :]
+            mask = jnp.ones((bq, bk), bool)
+            if causal:
+                mask &= kpos <= qpos
+            if window > 0:
+                mask &= (qpos - kpos) < window
+            srs = jnp.where(mask, srs, NEG)
+            m_new = jnp.maximum(m, srs.max(-1))
+            p = jnp.exp(srs - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqc,bkcd->bkgqd", p, vb.astype(jnp.float32))
+            m = m_new
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        outs.append(out.astype(q.dtype))  # [B, K, G, bq, dh]
+    out = jnp.stack(outs, axis=0)  # [n_q, B, K, G, bq, dh]
+    return out.transpose(1, 0, 4, 2, 3, 5).reshape(b, s, kh, g, dh)

@@ -1,0 +1,117 @@
+"""Shared model building blocks (pure-JAX, pytree params — no flax).
+
+Sharding is expressed with ``jax.lax.with_sharding_constraint`` against
+logical axis names resolved through ``distributed.sharding`` rules; when no
+mesh is active the constraints are no-ops, so the same model code runs in
+smoke tests (1 CPU device) and in the 512-device dry-run.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "shard",
+    "rms_norm",
+    "layer_norm",
+    "dense",
+    "gelu",
+    "silu",
+    "softcap",
+    "rope_table",
+    "apply_rope",
+    "trunc_normal",
+    "cross_entropy_loss",
+]
+
+
+def shard(x: jnp.ndarray, spec: Optional[P]) -> jnp.ndarray:
+    """Constraint ``x`` to ``spec`` if a mesh is active, else no-op."""
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x  # no mesh in scope (single-device smoke tests)
+
+
+def trunc_normal(key, shape, scale=1.0, dtype=jnp.float32):
+    """Fan-in-scaled truncated normal init."""
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    std = scale / math.sqrt(max(fan_in, 1))
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def rms_norm(x, weight, *, eps=1e-6, zero_centered=False):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    w = (1.0 + weight) if zero_centered else weight
+    return (x * w).astype(dt)
+
+
+def layer_norm(x, weight, bias, *, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight + bias).astype(dt)
+
+
+def dense(x, w, b=None):
+    y = x @ w
+    if b is not None:
+        y = y + b
+    return y
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def silu(x):
+    return jax.nn.silu(x)
+
+
+def softcap(x, cap: float):
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    return cap * jnp.tanh(x / cap)
+
+
+def rope_table(positions, d_head: int, theta: float = 10000.0):
+    """Returns (sin, cos) of shape [..., d_head/2]."""
+    half = d_head // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x: [..., S, H, d_head]; sin/cos: [..., S, d_head/2] (broadcast over H)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin = sin[..., None, :]
+    cos = cos[..., None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def cross_entropy_loss(logits, labels, *, z_loss: float = 0.0):
+    """Mean token cross-entropy in f32; labels < 0 are masked out."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    loss = lse - ll
+    if z_loss > 0:
+        loss = loss + z_loss * jnp.square(lse)
+    mask = (labels >= 0).astype(jnp.float32)
+    return (loss * mask).sum() / jnp.maximum(mask.sum(), 1.0)

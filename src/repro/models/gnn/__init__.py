@@ -1,0 +1,1 @@
+from . import common, gat, gin, pna, mace, so3  # noqa: F401

@@ -1,0 +1,126 @@
+"""GAT (Velickovic et al., arXiv:1710.10903) — gat-cora assigned config:
+2 layers, d_hidden=8, 8 heads, attention aggregator.
+
+Layer: per-edge score e_ij = LeakyReLU(a_src . Wh_i + a_dst . Wh_j), then
+segment-softmax over each destination's incoming edges (SDDMM -> edge
+softmax -> SpMM regime per the taxonomy) and a weighted segment-sum.
+First layer concatenates heads, final layer averages them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..common import trunc_normal
+from .common import GraphBatch, gather_src, segment_softmax, segment_sum
+
+__all__ = ["GATConfig", "init_params", "apply"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GATConfig:
+    name: str = "gat-cora"
+    n_layers: int = 2
+    d_in: int = 1433
+    d_hidden: int = 8
+    n_heads: int = 8
+    n_classes: int = 7
+    negative_slope: float = 0.2
+    dtype: Any = jnp.float32
+
+
+def init_params(cfg: GATConfig, key) -> Dict[str, Any]:
+    layers = []
+    d_in = cfg.d_in
+    for i in range(cfg.n_layers):
+        last = i == cfg.n_layers - 1
+        d_out = cfg.n_classes if last else cfg.d_hidden
+        k1, k2, k3, key = jax.random.split(key, 4)
+        layers.append(
+            {
+                "w": trunc_normal(k1, (d_in, cfg.n_heads, d_out)).astype(cfg.dtype),
+                "a_src": trunc_normal(k2, (cfg.n_heads, d_out)).astype(cfg.dtype),
+                "a_dst": trunc_normal(k3, (cfg.n_heads, d_out)).astype(cfg.dtype),
+                "b": jnp.zeros((cfg.n_heads, d_out), cfg.dtype),
+            }
+        )
+        d_in = cfg.d_hidden * cfg.n_heads if not last else d_out
+    return {"layers": layers}
+
+
+def _gat_layer(p, x, batch: GraphBatch, cfg: GATConfig, *, last: bool):
+    """One GAT layer. Two source-gather modes:
+
+    - plain: ``edge_src`` indexes the (possibly sharded) node table.
+    - hub-split (the paper's degree-score cache applied to GNN reads,
+      §Perf): edges are STATICALLY split into a cold stream
+      (``edge_src_cold`` — cross-shard gather) and a hot stream
+      (``edge_src_hub_pos`` — slots into the replicated top-degree hub
+      table ``hub_ids``); concat order is [cold, hot] and ``edge_dst`` /
+      ``edge_mask`` follow that order. The hot stream's rows never cross
+      devices — exactly the communication the paper's cache removes.
+    """
+    n = x.shape[0]
+    h = jnp.einsum("nf,fhd->nhd", x, p["w"])  # [N, H, D]
+    s_src = (h * p["a_src"]).sum(-1)  # [N, H]
+    s_dst = (h * p["a_dst"]).sum(-1)
+    if "edge_src_cold" in batch:
+        agg = _hub_split_attention(p, h, s_src, s_dst, batch, cfg, n)
+    else:
+        src = batch["edge_src"]
+        dst, mask = batch["edge_dst"], batch["edge_mask"]
+        e = s_src[src] + s_dst[dst]  # [E, H]
+        e = jax.nn.leaky_relu(e, cfg.negative_slope)
+        w = segment_softmax(e, dst, n, mask=mask[:, None])  # [E, H]
+        msg = gather_src(h, src) * w[..., None]  # [E, H, D]
+        msg = jnp.where(mask[:, None, None], msg, 0.0)
+        agg = segment_sum(msg, dst, n)
+    agg = agg + p["b"]  # [N, H, D]
+    if last:
+        return agg.mean(axis=1)  # average heads -> logits
+    return jax.nn.elu(agg.reshape(n, -1))  # concat heads
+
+
+def _hub_split_attention(p, h, s_src, s_dst, batch, cfg, n):
+    """Two-stream edge attention: the hot stream reads the replicated hub
+    table (zero cross-shard traffic — the paper's degree-score cache), the
+    cold stream does the sharded gather. The softmax is fused across
+    streams via explicit (max, exp-sum, weighted-sum) segment reductions —
+    NO concatenation, so each stream keeps its own sharding (a concat of
+    differently-sharded streams made GSPMD replicate everything: 204 GB
+    temps, §Perf iteration 6a)."""
+    from ..common import shard as _shard
+    from jax.sharding import PartitionSpec as P
+
+    hub = batch["hub_ids"]  # [C] replicated ids
+    h_hub = _shard(h[hub], P())  # [C, H, D] replicated hub features
+    s_hub = _shard(s_src[hub], P())  # [C, H]
+    cold, hot = batch["edge_src_cold"], batch["edge_src_hub_pos"]
+    dst_c, dst_h = batch["edge_dst_cold"], batch["edge_dst_hot"]
+    msk_c, msk_h = batch["edge_mask_cold"], batch["edge_mask_hot"]
+
+    e_c = jax.nn.leaky_relu(s_src[cold] + s_dst[dst_c], cfg.negative_slope)
+    e_h = jax.nn.leaky_relu(s_hub[hot] + s_dst[dst_h], cfg.negative_slope)
+    e_c = jnp.where(msk_c[:, None], e_c, -jnp.inf)
+    e_h = jnp.where(msk_h[:, None], e_h, -jnp.inf)
+    from .common import segment_max
+
+    m = jnp.maximum(segment_max(e_c, dst_c, n), segment_max(e_h, dst_h, n))
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    x_c = jnp.where(msk_c[:, None], jnp.exp(e_c - m[dst_c]), 0.0)
+    x_h = jnp.where(msk_h[:, None], jnp.exp(e_h - m[dst_h]), 0.0)
+    denom = segment_sum(x_c, dst_c, n) + segment_sum(x_h, dst_h, n)  # [N, H]
+    num = segment_sum(gather_src(h, cold) * x_c[..., None], dst_c, n) + \
+        segment_sum(h_hub[hot] * x_h[..., None], dst_h, n)  # [N, H, D]
+    return num / jnp.maximum(denom, 1e-9)[..., None]
+
+
+def apply(params, batch: GraphBatch, cfg: GATConfig) -> jnp.ndarray:
+    """Returns node logits [N, n_classes]."""
+    x = batch["node_feat"].astype(cfg.dtype)
+    for i, p in enumerate(params["layers"]):
+        x = _gat_layer(p, x, batch, cfg, last=i == cfg.n_layers - 1)
+    return x

@@ -1,0 +1,97 @@
+"""PNA (Corso et al., arXiv:2004.05718) — pna assigned config:
+4 layers, d_hidden=75, aggregators {mean, max, min, std},
+scalers {identity, amplification, attenuation}.
+
+Each layer: message = MLP([h_i || h_j]); aggregate with the 4 aggregators;
+apply the 3 degree scalers (log(d+1)/log(delta) amplification and its
+inverse); concat (4 agg x 3 scalers) and project back with an MLP + skip.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .common import (
+    GraphBatch,
+    degree_counts,
+    gather_src,
+    mlp_apply,
+    mlp_init,
+    segment_max,
+    segment_mean,
+    segment_sum,
+)
+
+__all__ = ["PNAConfig", "init_params", "apply"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PNAConfig:
+    name: str = "pna"
+    n_layers: int = 4
+    d_in: int = 16
+    d_hidden: int = 75
+    n_classes: int = 1  # regression head (ZINC-style)
+    delta: float = 2.5  # avg log-degree normalizer of the train set
+    dtype: Any = jnp.float32
+
+
+def init_params(cfg: PNAConfig, key) -> Dict[str, Any]:
+    k_in, key = jax.random.split(key)
+    layers = []
+    d = cfg.d_hidden
+    for _ in range(cfg.n_layers):
+        k1, k2, key = jax.random.split(key, 3)
+        layers.append(
+            {
+                "msg": mlp_init(k1, (2 * d, d), cfg.dtype),
+                "upd": mlp_init(k2, (12 * d + d, d), cfg.dtype),
+            }
+        )
+    k_out, key = jax.random.split(key)
+    return {
+        "encode": mlp_init(k_in, (cfg.d_in, cfg.d_hidden), cfg.dtype),
+        "layers": layers,
+        "decode": mlp_init(k_out, (cfg.d_hidden, cfg.d_hidden, cfg.n_classes),
+                           cfg.dtype),
+    }
+
+
+def _aggregate(msg, dst, mask, n, deg, cfg: PNAConfig):
+    msg = jnp.where(mask[:, None], msg, 0.0)
+    mean = segment_mean(msg, dst, n)
+    mx = segment_max(jnp.where(mask[:, None], msg, -jnp.inf), dst, n)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    mn = -segment_max(jnp.where(mask[:, None], -msg, -jnp.inf), dst, n)
+    mn = jnp.where(jnp.isfinite(mn), mn, 0.0)
+    sq = segment_mean(msg * msg, dst, n)
+    std = jnp.sqrt(jnp.maximum(sq - mean * mean, 0.0) + 1e-8)
+    agg = jnp.concatenate([mean, mx, mn, std], axis=-1)  # [N, 4D]
+    # scalers
+    logd = jnp.log(deg + 1.0)[:, None] / cfg.delta
+    amp = agg * logd
+    att = agg / jnp.maximum(logd, 1e-2)
+    return jnp.concatenate([agg, amp, att], axis=-1)  # [N, 12D]
+
+
+def apply(params, batch: GraphBatch, cfg: PNAConfig) -> jnp.ndarray:
+    """Returns graph-level prediction [n_graphs, n_classes] if graph_ids
+    are present, else node-level [N, n_classes]."""
+    src, dst, mask = batch["edge_src"], batch["edge_dst"], batch["edge_mask"]
+    x = mlp_apply(params["encode"], batch["node_feat"].astype(cfg.dtype))
+    n = x.shape[0]
+    deg = degree_counts(dst, mask, n)
+    for p in params["layers"]:
+        m_in = jnp.concatenate([gather_src(x, src), x[dst]], axis=-1)
+        msg = mlp_apply(p["msg"], m_in, act=jax.nn.relu, final_act=True)
+        agg = _aggregate(msg, dst, mask, n, deg, cfg)
+        x = x + mlp_apply(p["upd"], jnp.concatenate([x, agg], -1))
+    x = jnp.where(batch["node_mask"][:, None], x, 0.0)
+    if "graph_ids" in batch:
+        n_graphs = batch["labels"].shape[0]  # static: one target per graph
+        pooled = segment_mean(x, batch["graph_ids"], n_graphs)
+        return mlp_apply(params["decode"], pooled)
+    return mlp_apply(params["decode"], x)

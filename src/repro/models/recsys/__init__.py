@@ -1,0 +1,1 @@
+from . import embedding, din  # noqa: F401

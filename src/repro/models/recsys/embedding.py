@@ -1,0 +1,99 @@
+"""EmbeddingBag built from gather + segment-reduce.
+
+JAX has no native ``nn.EmbeddingBag`` and no CSR sparse — per the
+assignment this IS part of the system: ``jnp.take`` over the (sharded)
+table + ``jax.ops.segment_sum`` over bag offsets. Two layouts:
+
+- fixed-shape bags [B, L] with a mask (the DIN history layout), and
+- ragged bags (ids + offsets, torch-EmbeddingBag-compatible semantics).
+
+Tables shard rows over the 'model' axis (``P(tp, None)``). Lookup of a
+row then lowers to a cross-shard gather; the paper's degree-score cache
+reappears here as the *hot-row replication cache* (id frequency in CTR
+traffic is power-law, exactly the reuse structure of §III-B) — see
+``distributed/hub_gather.py``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..common import trunc_normal
+
+__all__ = [
+    "embedding_init",
+    "embedding_specs",
+    "lookup",
+    "bag_fixed",
+    "bag_ragged",
+]
+
+
+def embedding_init(key, n_rows: int, dim: int, dtype=jnp.float32):
+    return trunc_normal(key, (n_rows, dim), scale=1.0).astype(dtype)
+
+
+def embedding_specs(tp):
+    return P(tp, None)  # row-sharded table
+
+
+def lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, ids, axis=0)
+
+
+def bag_fixed(
+    table: jnp.ndarray,
+    ids: jnp.ndarray,  # [B, L]
+    mask: Optional[jnp.ndarray] = None,  # [B, L] bool
+    *,
+    mode: str = "sum",
+    weights: Optional[jnp.ndarray] = None,  # [B, L]
+) -> jnp.ndarray:
+    emb = lookup(table, ids)  # [B, L, D]
+    w = jnp.ones(ids.shape, emb.dtype) if weights is None else weights
+    if mask is not None:
+        w = w * mask.astype(emb.dtype)
+    s = (emb * w[..., None]).sum(axis=1)
+    if mode == "sum":
+        return s
+    if mode == "mean":
+        return s / jnp.maximum(w.sum(axis=1, keepdims=True), 1e-9)
+    if mode == "max":
+        neg = jnp.where(
+            (w > 0)[..., None], emb, jnp.full_like(emb, -jnp.inf)
+        )
+        m = neg.max(axis=1)
+        return jnp.where(jnp.isfinite(m), m, 0.0)
+    raise ValueError(mode)
+
+
+def bag_ragged(
+    table: jnp.ndarray,
+    ids: jnp.ndarray,  # [NNZ]
+    offsets: jnp.ndarray,  # [B] start offsets (torch convention)
+    n_bags: int,
+    *,
+    mode: str = "sum",
+    weights: Optional[jnp.ndarray] = None,  # [NNZ]
+) -> jnp.ndarray:
+    """torch.nn.EmbeddingBag semantics: bag b = reduce(ids[off[b]:off[b+1]])."""
+    nnz = ids.shape[0]
+    seg = jnp.searchsorted(offsets, jnp.arange(nnz), side="right") - 1
+    emb = lookup(table, ids)  # [NNZ, D]
+    if weights is not None:
+        emb = emb * weights[:, None]
+    if mode == "sum":
+        return jax.ops.segment_sum(emb, seg, num_segments=n_bags)
+    if mode == "mean":
+        s = jax.ops.segment_sum(emb, seg, num_segments=n_bags)
+        cnt = jax.ops.segment_sum(
+            jnp.ones((nnz, 1), emb.dtype), seg, num_segments=n_bags
+        )
+        return s / jnp.maximum(cnt, 1e-9)
+    if mode == "max":
+        m = jax.ops.segment_max(emb, seg, num_segments=n_bags)
+        return jnp.where(jnp.isfinite(m), m, 0.0)
+    raise ValueError(mode)

@@ -1,0 +1,575 @@
+"""Decoder-only LM transformer covering the five assigned LM architectures.
+
+One config-driven implementation:
+  - GQA attention (any H/K ratio), RoPE, optional QKV bias (qwen2.5)
+  - alternating local(sliding-window)/global layers + attn & final logit
+    soft-capping + post-norms + zero-centered RMSNorm (gemma2)
+  - SwiGLU MLP or top-k MoE FFN (moonshot 64e/top-6, phi3.5 16e/top-2)
+  - scan-over-layers (one repeating *block pattern*, e.g. ("local","global")
+    for gemma2) so compile time is O(1) in depth, with optional remat
+  - train (full-seq logits), prefill (build KV cache) and decode (one
+    token against a ring-buffer KV cache — local layers cache only the
+    window) paths sharing the same layer code.
+
+Params are plain pytrees; sharding is annotated via PartitionSpec trees
+(``param_specs``) + activation constraints, resolved against the mesh by
+jit — the same code runs on 1 CPU device (smoke tests) and on the 512-chip
+dry-run mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import (
+    apply_rope,
+    cross_entropy_loss,
+    rms_norm,
+    rope_table,
+    shard,
+    silu,
+    softcap,
+    trunc_normal,
+)
+from .moe import moe_apply, moe_init, moe_param_specs
+
+__all__ = [
+    "TransformerConfig",
+    "AxisRules",
+    "init_params",
+    "param_specs",
+    "forward_train",
+    "loss_fn",
+    "forward_prefill",
+    "forward_decode",
+    "init_kv_cache",
+    "kv_cache_specs",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Logical -> mesh axis mapping. ``data`` may be ('pod', 'data').
+
+    ``seq_parallel``: between layers, activations shard the sequence dim
+    over the model axis (Megatron-SP) — turns the 2x-per-layer activation
+    all-reduce into all-gather + reduce-scatter pairs and shards the norm
+    compute (§Perf iteration).
+    """
+
+    data: Tuple[str, ...] = ()
+    model: Tuple[str, ...] = ()
+    seq_parallel: bool = False
+    mesh: Any = None  # needed by the shard_map MoE path (moe_impl=local_ep)
+
+    @property
+    def dp(self):
+        return self.data if self.data else None
+
+    @property
+    def tp(self):
+        return self.model if self.model else None
+
+    def act3(self):  # [B, S, d]
+        if not self.data:
+            return None
+        if self.seq_parallel:
+            return P(self.dp, self.tp, None)
+        return P(self.dp, None, None)
+
+    def act_heads(self):  # [B, S, H, dh]
+        return P(self.dp, None, self.tp, None) if self.data else None
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    zero_centered_norm: bool = False
+    attn_softcap: float = 0.0
+    final_softcap: float = 0.0
+    sliding_window: int = 0  # >0: block pattern alternates (local, global)
+    post_norms: bool = False
+    norm_eps: float = 1e-6
+    # MoE (0 experts = dense MLP)
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_capacity: float = 1.25
+    # numerics / compilation
+    dtype: Any = jnp.bfloat16
+    query_scale: Optional[float] = None  # None -> 1/sqrt(d_head)
+    tie_embeddings: bool = False
+    remat: bool = True
+    # perf knobs (§Perf): sequence length at/above which the flash
+    # (online-softmax, block-skipping) attention path is used, and whether
+    # the MoE dispatch shards its capacity axis over data
+    flash_cutoff: int = 8192
+    flash_block: int = 1024
+    moe_shard_capacity: bool = False
+    moe_impl: str = "dense"  # 'dense' | 'local_ep' (shard_map, §Perf it.3)
+
+    @property
+    def pattern(self) -> Tuple[str, ...]:
+        return ("local", "global") if self.sliding_window > 0 else ("global",)
+
+    @property
+    def n_blocks(self) -> int:
+        lp = len(self.pattern)
+        assert self.n_layers % lp == 0, (self.n_layers, lp)
+        return self.n_layers // lp
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe_experts > 0
+
+    def window_for(self, kind: str) -> int:
+        return self.sliding_window if kind == "local" else 0
+
+    def param_count(self) -> int:
+        """Total parameters (for 6ND MODEL_FLOPS accounting)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        attn = d * (self.n_heads + 2 * self.n_kv_heads) * self.d_head
+        attn += self.n_heads * self.d_head * d
+        if self.is_moe:
+            ffn = self.moe_experts * 3 * d * f + d * self.moe_experts
+        else:
+            ffn = 3 * d * f
+        norms = d * (4 if self.post_norms else 2)
+        per_layer = attn + ffn + norms
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + d
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE counts top_k of E experts)."""
+        if not self.is_moe:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        dense_ffn = self.moe_top_k * 3 * d * f + d * self.moe_experts
+        full_ffn = self.moe_experts * 3 * d * f + d * self.moe_experts
+        return self.param_count() - self.n_layers * (full_ffn - dense_ffn)
+
+
+# --------------------------------------------------------------------------
+# init + sharding specs
+# --------------------------------------------------------------------------
+def _layer_init(cfg: TransformerConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    d, h, k_, dh, f = (
+        cfg.d_model,
+        cfg.n_heads,
+        cfg.n_kv_heads,
+        cfg.d_head,
+        cfg.d_ff,
+    )
+    dt = cfg.dtype
+    p: Dict[str, Any] = {
+        "attn_norm": jnp.zeros((d,), dt)
+        if cfg.zero_centered_norm
+        else jnp.ones((d,), dt),
+        "wq": trunc_normal(ks[0], (d, h * dh)).astype(dt),
+        "wk": trunc_normal(ks[1], (d, k_ * dh)).astype(dt),
+        "wv": trunc_normal(ks[2], (d, k_ * dh)).astype(dt),
+        "wo": trunc_normal(ks[3], (h * dh, d)).astype(dt),
+        "ffn_norm": jnp.zeros((d,), dt)
+        if cfg.zero_centered_norm
+        else jnp.ones((d,), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), dt)
+        p["bk"] = jnp.zeros((k_ * dh,), dt)
+        p["bv"] = jnp.zeros((k_ * dh,), dt)
+    if cfg.post_norms:
+        zero = jnp.zeros((d,), dt)
+        one = jnp.ones((d,), dt)
+        p["attn_post_norm"] = zero if cfg.zero_centered_norm else one
+        p["ffn_post_norm"] = zero if cfg.zero_centered_norm else one
+    if cfg.is_moe:
+        p["moe"] = moe_init(ks[4], d, f, cfg.moe_experts, dt)
+    else:
+        p["w_gate"] = trunc_normal(ks[5], (d, f)).astype(dt)
+        p["w_up"] = trunc_normal(ks[6], (d, f)).astype(dt)
+        p["w_down"] = trunc_normal(ks[7], (f, d)).astype(dt)
+    return p
+
+
+def init_params(cfg: TransformerConfig, key) -> Dict[str, Any]:
+    k_emb, k_out, k_l = jax.random.split(key, 3)
+    params: Dict[str, Any] = {
+        "embed": trunc_normal(k_emb, (cfg.vocab, cfg.d_model), scale=1.0).astype(
+            cfg.dtype
+        ),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype)
+        if cfg.zero_centered_norm
+        else jnp.ones((cfg.d_model,), cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = trunc_normal(
+            k_out, (cfg.d_model, cfg.vocab)
+        ).astype(cfg.dtype)
+    # stacked layers per pattern entry: leaves get leading dim n_blocks
+    layers: Dict[str, Any] = {}
+    for i, kind in enumerate(cfg.pattern):
+        per_block = [
+            _layer_init(cfg, jax.random.fold_in(k_l, b * 8 + i))
+            for b in range(cfg.n_blocks)
+        ]
+        layers[f"sub{i}_{kind}"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *per_block
+        )
+    params["layers"] = layers
+    return params
+
+
+def _layer_specs(cfg: TransformerConfig, rules: AxisRules) -> Dict[str, Any]:
+    tp = rules.tp
+    L = None  # leading stacked-block dim is replicated
+    s: Dict[str, Any] = {
+        "attn_norm": P(L, None),
+        "wq": P(L, None, tp),
+        "wk": P(L, None, tp),
+        "wv": P(L, None, tp),
+        "wo": P(L, tp, None),
+        "ffn_norm": P(L, None),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = P(L, tp)
+        s["bk"] = P(L, tp)
+        s["bv"] = P(L, tp)
+    if cfg.post_norms:
+        s["attn_post_norm"] = P(L, None)
+        s["ffn_post_norm"] = P(L, None)
+    if cfg.is_moe:
+        s["moe"] = moe_param_specs(tp, stacked=True)
+    else:
+        s["w_gate"] = P(L, None, tp)
+        s["w_up"] = P(L, None, tp)
+        s["w_down"] = P(L, tp, None)
+    return s
+
+
+def param_specs(cfg: TransformerConfig, rules: AxisRules) -> Dict[str, Any]:
+    tp = rules.tp
+    specs: Dict[str, Any] = {
+        "embed": P(tp, None),  # vocab-sharded
+        "final_norm": P(None),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = P(None, tp)
+    specs["layers"] = {
+        f"sub{i}_{kind}": _layer_specs(cfg, rules)
+        for i, kind in enumerate(cfg.pattern)
+    }
+    return specs
+
+
+# --------------------------------------------------------------------------
+# attention / layer bodies
+# --------------------------------------------------------------------------
+def _qkv(x, p, cfg: TransformerConfig):
+    b, s, _ = x.shape
+    h, k_, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = x @ p["wq"] + (p.get("bq", 0.0))
+    k = x @ p["wk"] + (p.get("bk", 0.0))
+    v = x @ p["wv"] + (p.get("bv", 0.0))
+    return (
+        q.reshape(b, s, h, dh),
+        k.reshape(b, s, k_, dh),
+        v.reshape(b, s, k_, dh),
+    )
+
+
+def _attn_scores(q, k, cfg: TransformerConfig):
+    """q: [B,S,H,dh]; k: [B,T,K,dh] -> scores [B,K,G,S,T] (GQA grouped)."""
+    b, s, h, dh = q.shape
+    k_heads = k.shape[2]
+    g = h // k_heads
+    q = q.reshape(b, s, k_heads, g, dh)
+    scale = cfg.query_scale if cfg.query_scale is not None else 1.0 / math.sqrt(dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    if cfg.attn_softcap > 0:
+        scores = softcap(scores, cfg.attn_softcap)
+    return scores
+
+
+def _attn_out(scores, v, mask, p, cfg: TransformerConfig):
+    """scores [B,K,G,S,T], v [B,T,K,dh], mask broadcastable to scores."""
+    b, k_heads, g, s, t = scores.shape
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w.astype(v.dtype), v)
+    out = out.reshape(b, s, k_heads * g * cfg.d_head)
+    return out @ p["wo"]
+
+
+def _causal_mask(s: int, window: int):
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    m = kp <= qp
+    if window > 0:
+        m &= (qp - kp) < window
+    return m  # [S, T]
+
+
+def _mlp(x, p):
+    return (silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+def _ffn(x_flat, p, cfg: TransformerConfig, rules: AxisRules):
+    if cfg.is_moe:
+        if cfg.moe_impl == "local_ep" and rules.mesh is not None:
+            mesh_shape = dict(zip(rules.mesh.axis_names,
+                                  rules.mesh.devices.shape))
+            dp_extent = 1
+            for a in rules.data:
+                dp_extent *= mesh_shape.get(a, 1)
+            if x_flat.shape[0] % max(dp_extent, 1) == 0:
+                from .moe import moe_apply_local_ep
+
+                return moe_apply_local_ep(
+                    p["moe"], x_flat,
+                    n_experts=cfg.moe_experts, top_k=cfg.moe_top_k,
+                    capacity_factor=cfg.moe_capacity,
+                    rules=rules, mesh=rules.mesh,
+                )
+        return moe_apply(
+            p["moe"],
+            x_flat,
+            n_experts=cfg.moe_experts,
+            top_k=cfg.moe_top_k,
+            capacity_factor=cfg.moe_capacity,
+            rules=rules,
+            shard_capacity=cfg.moe_shard_capacity,
+        )
+    return _mlp(x_flat, p)
+
+
+def _layer(x, p, kind: str, cfg: TransformerConfig, rules: AxisRules, sin, cos):
+    """Full-sequence layer (train/prefill). x: [B,S,d]."""
+    from .attention import DENSE_CUTOFF, flash_attention_jnp
+
+    b, s, d = x.shape
+    h = rms_norm(x, p["attn_norm"], eps=cfg.norm_eps,
+                 zero_centered=cfg.zero_centered_norm)
+    q, k, v = _qkv(h, p, cfg)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    q = shard(q, rules.act_heads())
+    if s >= cfg.flash_cutoff:
+        # flash path: online softmax over KV blocks, O(block^2) memory.
+        # static unroll (differentiable + dead-block elimination) when the
+        # block grid is small; scanned online-softmax otherwise.
+        kh = cfg.n_kv_heads
+        g = cfg.n_heads // kh
+        scale = (cfg.query_scale if cfg.query_scale is not None
+                 else 1.0 / math.sqrt(cfg.d_head))
+        ctx = flash_attention_jnp(
+            q.reshape(b, s, kh, g, cfg.d_head), k, v,
+            scale=scale, causal=True, window=cfg.window_for(kind),
+            softcap=cfg.attn_softcap,
+            block_q=cfg.flash_block, block_k=cfg.flash_block,
+            static_unroll=s <= 8192,
+        )
+        attn = ctx.reshape(b, s, cfg.n_heads * cfg.d_head) @ p["wo"]
+    else:
+        scores = _attn_scores(q, k, cfg)
+        mask = _causal_mask(s, cfg.window_for(kind))
+        attn = _attn_out(scores, v, mask[None, None, None], p, cfg)
+    if cfg.post_norms:
+        attn = rms_norm(attn, p["attn_post_norm"], eps=cfg.norm_eps,
+                        zero_centered=cfg.zero_centered_norm)
+    x = x + attn
+    x = shard(x, rules.act3())
+    hn = rms_norm(x, p["ffn_norm"], eps=cfg.norm_eps,
+                  zero_centered=cfg.zero_centered_norm)
+    y = _ffn(hn.reshape(b * s, d), p, cfg, rules).reshape(b, s, d)
+    if cfg.post_norms:
+        y = rms_norm(y, p["ffn_post_norm"], eps=cfg.norm_eps,
+                     zero_centered=cfg.zero_centered_norm)
+    x = x + y
+    return shard(x, rules.act3()), (k, v)
+
+
+# --------------------------------------------------------------------------
+# train / prefill forward (scan over blocks)
+# --------------------------------------------------------------------------
+def forward_train(params, tokens, cfg: TransformerConfig,
+                  rules: AxisRules = AxisRules()):
+    """tokens [B, S] -> logits [B, S, V]."""
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.dtype)
+    x = shard(x, rules.act3())
+    sin, cos = rope_table(jnp.arange(s), cfg.d_head, cfg.rope_theta)
+
+    def block(x, block_params):
+        for i, kind in enumerate(cfg.pattern):
+            x, _ = _layer(x, block_params[f"sub{i}_{kind}"], kind, cfg, rules,
+                          sin, cos)
+        return x, None
+
+    blk = jax.checkpoint(block) if cfg.remat else block
+    x, _ = jax.lax.scan(blk, x, params["layers"])
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps,
+                 zero_centered=cfg.zero_centered_norm)
+    unembed = (
+        params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    )
+    logits = x @ unembed.astype(cfg.dtype)
+    if rules.data:
+        logits = shard(logits, P(rules.dp, None, rules.tp))  # vocab-sharded
+    if cfg.final_softcap > 0:
+        logits = softcap(logits, cfg.final_softcap)
+    return logits
+
+
+def loss_fn(params, tokens, labels, cfg: TransformerConfig,
+            rules: AxisRules = AxisRules()):
+    logits = forward_train(params, tokens, cfg, rules)
+    return cross_entropy_loss(logits, labels)
+
+
+# --------------------------------------------------------------------------
+# KV cache (ring buffer; local layers cache only the window)
+# --------------------------------------------------------------------------
+def _cache_len(cfg: TransformerConfig, kind: str, max_len: int) -> int:
+    w = cfg.window_for(kind)
+    return min(w, max_len) if w > 0 else max_len
+
+
+def init_kv_cache(cfg: TransformerConfig, batch: int, max_len: int):
+    cache = {}
+    for i, kind in enumerate(cfg.pattern):
+        t = _cache_len(cfg, kind, max_len)
+        cache[f"sub{i}_{kind}"] = {
+            "k": jnp.zeros((cfg.n_blocks, batch, t, cfg.n_kv_heads, cfg.d_head),
+                           cfg.dtype),
+            "v": jnp.zeros((cfg.n_blocks, batch, t, cfg.n_kv_heads, cfg.d_head),
+                           cfg.dtype),
+            "pos": jnp.full((cfg.n_blocks, batch, t), -1, jnp.int32),
+        }
+    return cache
+
+
+def kv_cache_specs(cfg: TransformerConfig, rules: AxisRules):
+    tp = rules.tp
+    dp = rules.dp
+    spec = {"k": P(None, dp, None, tp, None),
+            "v": P(None, dp, None, tp, None),
+            "pos": P(None, dp, None)}
+    return {f"sub{i}_{kind}": dict(spec)
+            for i, kind in enumerate(cfg.pattern)}
+
+
+def forward_prefill(params, tokens, cfg: TransformerConfig,
+                    rules: AxisRules = AxisRules(), *, max_len: int):
+    """Run the prompt; returns (last-token logits [B, V], kv cache)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.dtype)
+    x = shard(x, rules.act3())
+    sin, cos = rope_table(jnp.arange(s), cfg.d_head, cfg.rope_theta)
+
+    def block(x, block_params):
+        caches = {}
+        for i, kind in enumerate(cfg.pattern):
+            x, (k, v) = _layer(x, block_params[f"sub{i}_{kind}"], kind, cfg,
+                               rules, sin, cos)
+            t = _cache_len(cfg, kind, max_len)
+            start = max(s - t, 0)
+            idx = (start + jnp.arange(min(t, s))) % t
+            kc = jnp.zeros((b, t, cfg.n_kv_heads, cfg.d_head), cfg.dtype)
+            vc = jnp.zeros_like(kc)
+            pc = jnp.full((b, t), -1, jnp.int32)
+            kc = kc.at[:, idx].set(k[:, start:])
+            vc = vc.at[:, idx].set(v[:, start:])
+            pc = pc.at[:, idx].set(start + jnp.arange(min(t, s)))
+            caches[f"sub{i}_{kind}"] = {"k": kc, "v": vc, "pos": pc}
+        return x, caches
+
+    blk = jax.checkpoint(block) if cfg.remat else block
+    x, caches = jax.lax.scan(blk, x, params["layers"])
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps,
+                 zero_centered=cfg.zero_centered_norm)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = x[:, -1] @ unembed.astype(cfg.dtype)
+    if cfg.final_softcap > 0:
+        logits = softcap(logits, cfg.final_softcap)
+    return logits, caches
+
+
+def _decode_layer(x, p, kind, cache, pos, cfg: TransformerConfig,
+                  rules: AxisRules):
+    """One-token layer. x: [B,1,d]; cache entries [B,T,K,dh]."""
+    b = x.shape[0]
+    t = cache["k"].shape[1]
+    h = rms_norm(x, p["attn_norm"], eps=cfg.norm_eps,
+                 zero_centered=cfg.zero_centered_norm)
+    q, k, v = _qkv(h, p, cfg)
+    sin_q, cos_q = rope_table(pos[None], cfg.d_head, cfg.rope_theta)
+    q = apply_rope(q, sin_q[None], cos_q[None])
+    k = apply_rope(k, sin_q[None], cos_q[None])
+    slot = pos % t
+    kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    pc = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], jnp.full((b, 1), pos, jnp.int32), slot, axis=1
+    )
+    scores = _attn_scores(q, kc, cfg)  # [B,K,G,1,T]
+    valid = (pc >= 0) & (pc <= pos)
+    w = cfg.window_for(kind)
+    if w > 0:
+        valid &= (pos - pc) < w
+    attn = _attn_out(scores, vc, valid[:, None, None, None, :], p, cfg)
+    if cfg.post_norms:
+        attn = rms_norm(attn, p["attn_post_norm"], eps=cfg.norm_eps,
+                        zero_centered=cfg.zero_centered_norm)
+    x = x + attn
+    hn = rms_norm(x, p["ffn_norm"], eps=cfg.norm_eps,
+                  zero_centered=cfg.zero_centered_norm)
+    y = _ffn(hn.reshape(b, -1), p, cfg, rules).reshape(b, 1, -1)
+    if cfg.post_norms:
+        y = rms_norm(y, p["ffn_post_norm"], eps=cfg.norm_eps,
+                     zero_centered=cfg.zero_centered_norm)
+    return x + y, {"k": kc, "v": vc, "pos": pc}
+
+
+def forward_decode(params, token, pos, cache, cfg: TransformerConfig,
+                   rules: AxisRules = AxisRules()):
+    """token [B] int32, pos scalar int32 -> (logits [B,V], new cache)."""
+    b = token.shape[0]
+    x = params["embed"][token][:, None, :].astype(cfg.dtype)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.dtype)
+
+    def block(x, scanned):
+        block_params, block_cache = scanned
+        new_cache = {}
+        for i, kind in enumerate(cfg.pattern):
+            key = f"sub{i}_{kind}"
+            x, new_cache[key] = _decode_layer(
+                x, block_params[key], kind, block_cache[key], pos, cfg, rules
+            )
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(block, x, (params["layers"], cache))
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps,
+                 zero_centered=cfg.zero_centered_norm)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = x[:, 0] @ unembed.astype(cfg.dtype)
+    if cfg.final_softcap > 0:
+        logits = softcap(logits, cfg.final_softcap)
+    return logits, new_cache

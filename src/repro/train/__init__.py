@@ -1,0 +1,1 @@
+from . import optimizer, train_loop, checkpoint  # noqa: F401

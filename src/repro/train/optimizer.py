@@ -1,0 +1,122 @@
+"""AdamW on pytrees (no optax in this container) + ZeRO-1-style sharding.
+
+``adamw()`` returns an (init, update) pair operating on arbitrary pytrees
+with global-norm gradient clipping and decoupled weight decay. Moments are
+f32 regardless of param dtype (bf16-safe).
+
+``zero1_specs`` extends the parameter PartitionSpecs so optimizer moments
+are additionally sharded along the 'data' axis (the first dimension not
+already sharded whose size divides the data-axis extent) — the ZeRO-1
+trick: optimizer state is partitioned across data-parallel replicas, and
+GSPMD inserts the reduce-scatter/all-gather pair around the update.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["adamw", "AdamWState", "cosine_schedule", "zero1_specs",
+           "global_norm"]
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jnp.ndarray
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = 0.5 * base_lr * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+@dataclasses.dataclass(frozen=True)
+class adamw:
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params) -> AdamWState:
+        f32 = lambda x: jnp.zeros(x.shape, jnp.float32)
+        return AdamWState(
+            mu=jax.tree.map(f32, params),
+            nu=jax.tree.map(f32, params),
+            count=jnp.zeros((), jnp.int32),
+        )
+
+    def update(
+        self, grads, state: AdamWState, params
+    ) -> Tuple[Any, AdamWState]:
+        count = state.count + 1
+        if self.clip_norm is not None:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gn + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        lr = self.lr(count) if callable(self.lr) else self.lr
+        b1, b2 = self.b1, self.b2
+
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        mu_hat = jax.tree.map(lambda m: m / (1 - b1 ** count), mu)
+        nu_hat = jax.tree.map(lambda v: v / (1 - b2 ** count), nu)
+
+        def upd(p, m, v):
+            u = m / (jnp.sqrt(v) + self.eps) + self.weight_decay * p.astype(
+                jnp.float32
+            )
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu_hat, nu_hat)
+        return new_params, AdamWState(mu=mu, nu=nu, count=count)
+
+
+def _shard_moment_spec(spec: P, shape, data_axes, mesh_shape) -> P:
+    """Add 'data' sharding to the first unsharded, divisible dim."""
+    if not data_axes:
+        return spec
+    extent = 1
+    for a in data_axes:
+        extent *= mesh_shape.get(a, 1)
+    parts = list(spec) if spec is not None else [None] * len(shape)
+    while len(parts) < len(shape):
+        parts.append(None)
+    for i, (p_, s_) in enumerate(zip(parts, shape)):
+        if p_ is None and s_ % extent == 0 and s_ >= extent:
+            parts[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+            return P(*parts)
+    return spec
+
+
+def zero1_specs(param_specs, param_shapes, data_axes: Tuple[str, ...],
+                mesh_shape: dict):
+    """Specs for AdamW moments: params' specs + data-axis sharding (ZeRO-1)."""
+    mom = jax.tree.map(
+        lambda sp, sh: _shard_moment_spec(sp, sh.shape, data_axes, mesh_shape),
+        param_specs, param_shapes,
+        is_leaf=lambda x: isinstance(x, P) or x is None,
+    )
+    return AdamWState(mu=mom, nu=mom, count=P())

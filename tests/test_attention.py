@@ -1,0 +1,67 @@
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.attention import flash_attention_jnp
+
+
+def dense_ref(q, k, v, *, scale, causal, window, softcap):
+    b, s, kh, g, dh = q.shape
+    t = k.shape[1]
+    srs = jnp.einsum("bskgd,btkd->bkgst", q.astype(jnp.float32) * scale,
+                     k.astype(jnp.float32))
+    if softcap > 0:
+        srs = softcap * jnp.tanh(srs / softcap)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kp <= qp
+    if window > 0:
+        mask &= (qp - kp) < window
+    srs = jnp.where(mask[None, None, None], srs, -1e30)
+    w = jax.nn.softmax(srs, -1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v.astype(jnp.float32))
+    return out
+
+
+@pytest.mark.parametrize("causal,window,softcap", [
+    (True, 0, 0.0),
+    (True, 64, 0.0),
+    (True, 0, 50.0),
+    (True, 32, 50.0),
+    (False, 0, 0.0),
+])
+def test_flash_matches_dense(causal, window, softcap):
+    rng = np.random.default_rng(0)
+    b, s, kh, g, dh = 2, 256, 2, 2, 16
+    q = jnp.asarray(rng.normal(size=(b, s, kh, g, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kh, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kh, dh)), jnp.float32)
+    scale = 1.0 / math.sqrt(dh)
+    want = dense_ref(q, k, v, scale=scale, causal=causal, window=window,
+                     softcap=softcap)
+    got = flash_attention_jnp(
+        q, k, v, scale=scale, causal=causal, window=window, softcap=softcap,
+        block_q=64, block_k=64,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_block_shape_independence():
+    rng = np.random.default_rng(1)
+    b, s, kh, g, dh = 1, 128, 1, 4, 8
+    q = jnp.asarray(rng.normal(size=(b, s, kh, g, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kh, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kh, dh)), jnp.float32)
+    outs = [
+        flash_attention_jnp(q, k, v, scale=0.3, block_q=bq, block_k=bk)
+        for bq, bk in [(16, 16), (32, 64), (128, 128)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),
+                                   rtol=1e-5, atol=1e-5)

@@ -1,0 +1,97 @@
+"""Config exactness: every assigned architecture matches the assignment
+table verbatim, and the shape tables expose all 40 cells."""
+import pytest
+
+from repro.configs.registry import ARCHS, cells, get_arch
+from repro.configs.shapes import GNN_SHAPES, LM_SHAPES, RECSYS_SHAPES
+
+
+def test_lm_configs_exact():
+    c = get_arch("moonshot-v1-16b-a3b").config()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab, c.moe_experts, c.moe_top_k) == (
+        48, 2048, 16, 16, 1408, 163840, 64, 6)
+    c = get_arch("phi3.5-moe-42b-a6.6b").config()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab, c.moe_experts, c.moe_top_k) == (
+        32, 4096, 32, 8, 6400, 32064, 16, 2)
+    c = get_arch("stablelm-1.6b").config()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (24, 2048, 32, 32, 5632, 100352)
+    c = get_arch("gemma2-27b").config()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (46, 4608, 32, 16, 36864, 256000)
+    assert c.sliding_window == 4096 and c.attn_softcap == 50.0
+    assert c.final_softcap == 30.0
+    c = get_arch("qwen2.5-14b").config()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (48, 5120, 40, 8, 13824, 152064)
+    assert c.qkv_bias
+
+
+def test_gnn_configs_exact():
+    c = get_arch("mace").config()
+    assert (c.n_layers, c.channels, c.l_max, c.correlation, c.n_rbf) == (
+        2, 128, 2, 3, 8)
+    c = get_arch("pna").config()
+    assert (c.n_layers, c.d_hidden) == (4, 75)
+    c = get_arch("gin-tu").config()
+    assert (c.n_layers, c.d_hidden) == (5, 64)
+    c = get_arch("gat-cora").config()
+    assert (c.n_layers, c.d_hidden, c.n_heads) == (2, 8, 8)
+
+
+def test_recsys_config_exact():
+    c = get_arch("din").config()
+    assert c.embed_dim == 18 and c.seq_len == 100
+    assert c.attn_hidden == (80, 40) and c.mlp_hidden == (200, 80)
+    assert c.n_items >= 10**6  # taxonomy: huge sparse tables
+
+
+def test_shape_tables_exact():
+    s = LM_SHAPES
+    assert (s["train_4k"].seq_len, s["train_4k"].global_batch) == (4096, 256)
+    assert (s["prefill_32k"].seq_len, s["prefill_32k"].global_batch) == (
+        32768, 32)
+    assert (s["decode_32k"].seq_len, s["decode_32k"].global_batch) == (
+        32768, 128)
+    assert (s["long_500k"].seq_len, s["long_500k"].global_batch) == (
+        524288, 1)
+    g = GNN_SHAPES
+    assert (g["full_graph_sm"].n_nodes, g["full_graph_sm"].n_edges,
+            g["full_graph_sm"].d_feat) == (2708, 10556, 1433)
+    assert (g["minibatch_lg"].n_nodes, g["minibatch_lg"].n_edges) == (
+        232_965, 114_615_892)
+    assert g["minibatch_lg"].fanout == (15, 10)
+    assert (g["ogb_products"].n_nodes, g["ogb_products"].n_edges,
+            g["ogb_products"].d_feat) == (2_449_029, 61_859_140, 100)
+    assert (g["molecule"].nodes_per_graph, g["molecule"].edges_per_graph,
+            g["molecule"].batch_graphs) == (30, 64, 128)
+    r = RECSYS_SHAPES
+    assert r["train_batch"].batch == 65_536
+    assert r["serve_p99"].batch == 512
+    assert r["serve_bulk"].batch == 262_144
+    assert r["retrieval_cand"].n_candidates == 1_000_000
+
+
+def test_cell_count():
+    runnable = cells()
+    skipped = [c for c in cells(include_skipped=True) if c not in runnable]
+    assert len(runnable) + len(skipped) == 40  # the assigned 40 cells
+    assert len(skipped) == 4  # long_500k on the 4 full-attention archs
+    assert all(s == "long_500k" for _, s in skipped)
+
+
+def test_param_counts_sane():
+    """Param counts should land near the arch names' advertised sizes."""
+    assert abs(get_arch("stablelm-1.6b").config().param_count() / 1.6e9 - 1) < 0.25
+    assert abs(get_arch("qwen2.5-14b").config().param_count() / 14e9 - 1) < 0.25
+    assert abs(get_arch("gemma2-27b").config().param_count() / 27e9 - 1) < 0.25
+    # moonshot: the assigned table (48L x 64e x d_ff 1408, all-MoE) gives
+    # 28B total — the real Moonlight shares/structures experts differently,
+    # but the assignment numbers are the contract. Active ~= 4B ~ "a3b".
+    m = get_arch("moonshot-v1-16b-a3b").config()
+    assert abs(m.active_param_count() / 3e9 - 1) < 0.5
+    p = get_arch("phi3.5-moe-42b-a6.6b").config()
+    assert abs(p.param_count() / 42e9 - 1) < 0.3
+    assert abs(p.active_param_count() / 6.6e9 - 1) < 0.3

@@ -1,0 +1,99 @@
+import numpy as np
+import pytest
+
+from repro.core.cache import (
+    ClampiCache,
+    NetworkModel,
+    StaticDegreeCache,
+    build_static_degree_cache,
+)
+
+
+def test_hit_miss_basics():
+    c = ClampiCache(1024, 16)
+    assert not c.get(1, 100)  # compulsory miss
+    assert c.get(1, 100)  # hit
+    assert c.stats.gets == 2 and c.stats.hits == 1
+    assert c.stats.compulsory_misses == 1
+
+
+def test_capacity_eviction_lru():
+    c = ClampiCache(100, 100)
+    c.get(1, 60)
+    c.get(2, 60)  # must evict 1 (LRU)
+    assert 2 in c.entries and 1 not in c.entries
+    assert c.stats.evictions == 1
+    assert not c.get(1, 60)  # capacity miss (seen before, not compulsory)
+    assert c.stats.compulsory_misses == 2 and c.stats.misses == 3
+
+
+def test_lru_order_respected():
+    c = ClampiCache(100, 100)
+    c.get(1, 40)
+    c.get(2, 40)
+    c.get(1, 40)  # touch 1 -> 2 is LRU
+    c.get(3, 40)  # evicts 2
+    assert 1 in c.entries and 3 in c.entries and 2 not in c.entries
+
+
+def test_degree_score_protects_hubs():
+    """Paper §III-B2: high-degree entries survive floods of low-degree ones."""
+    c = ClampiCache(100, 100)
+    c.get(99, 50, score=1000.0)  # hub
+    for k in range(20):
+        c.get(k, 30, score=1.0)  # low-degree flood
+    assert 99 in c.entries, "hub must not be evicted by low-score entries"
+
+
+def test_user_score_refuses_worse_entries():
+    c = ClampiCache(100, 2)
+    c.get(1, 40, score=10.0)
+    c.get(2, 40, score=10.0)
+    c.get(3, 40, score=1.0)  # lower score than every resident -> refused
+    assert 3 not in c.entries and len(c.entries) == 2
+
+
+def test_fragmentation_coalescing():
+    c = ClampiCache(100, 100)
+    c.get(1, 30)
+    c.get(2, 30)
+    c.get(3, 30)
+    # evict middle by touching 1 and 3
+    c.get(1, 30)
+    c.get(3, 30)
+    c.get(4, 40)  # needs eviction of 2 (LRU); 30+10 tail free -> must coalesce
+    assert 4 in c.entries
+    total_free = sum(s for _, s in c.free)
+    assert total_free == 100 - c.used_bytes
+
+
+def test_transparent_mode_flushes_on_epoch():
+    c = ClampiCache(1024, 16, mode="transparent")
+    c.get(1, 100)
+    c.close_epoch()
+    assert not c.get(1, 100)  # flushed
+    c2 = ClampiCache(1024, 16, mode="always")
+    c2.get(1, 100)
+    c2.close_epoch()
+    assert c2.get(1, 100)  # persists across epochs
+
+
+def test_oversize_entry_not_cached():
+    c = ClampiCache(50, 16)
+    c.get(1, 100)
+    assert 1 not in c.entries and c.stats.evictions == 0
+
+
+def test_static_degree_cache():
+    deg = np.array([1, 9, 3, 7, 5])
+    sc = build_static_degree_cache(deg, 2)
+    assert set(sc.vertex_ids.tolist()) == {1, 3}  # top-2 degrees
+    slots = sc.slot_of(np.array([0, 1, 3, 4]))
+    assert slots[0] == -1 and slots[3] == -1
+    assert slots[1] >= 0 and slots[2] >= 0
+
+
+def test_network_model():
+    net = NetworkModel(alpha=2e-6, beta=1e-10)
+    assert net.remote(0) == pytest.approx(2e-6)
+    assert net.remote(10**6) == pytest.approx(2e-6 + 1e-4)

