@@ -29,6 +29,7 @@ def main(argv=None):
         bench_roofline,
         bench_scores,
         bench_shared_scaling,
+        bench_streaming,
         bench_strong_scaling,
     )
 
@@ -39,6 +40,7 @@ def main(argv=None):
         "scores_fig8": lambda: bench_scores.run(quick),
         "reuse_fig1_4_5": lambda: bench_reuse.run(quick),
         "strong_scaling_fig9_10": lambda: bench_strong_scaling.run(quick),
+        "streaming_updates": lambda: bench_streaming.run(quick),
         "roofline": lambda: bench_roofline.run(),
     }
     if args.only:
@@ -105,6 +107,14 @@ def checklist(results):
             f"{last['vs_tric']:.1f}x vs TriC; cache cuts "
             f"{last['cache_gain_comm']:.0%} of comm {note}",
             ok,
+        ))
+    fs = results.get("streaming_updates", {})
+    if "incremental_speedup_vs_recount" in fs:
+        checks.append((
+            f"streaming: incremental maintenance "
+            f"{fs['incremental_speedup_vs_recount']}x faster than "
+            f"per-batch recount",
+            fs["incremental_speedup_vs_recount"] > 1.0,
         ))
     for msg, ok in checks:
         print(("PASS " if ok else "FAIL ") + msg)

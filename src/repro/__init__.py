@@ -5,6 +5,8 @@ Framework layout:
                 RMA pull schedule, CLaMPI cache, async engine, TriC baseline)
   graphs/       graph data pipeline (R-MAT, power-law stand-ins, sampler)
   models/       assigned architectures (LM transformers, GNNs, recsys)
+  streaming/    incremental TC/LCC under batched edge updates (DynamicCSR
+                delta store, exact delta engine, cache coherence)
   data/         token/recsys synthetic pipelines
   train/serve/  training and serving substrates
   distributed/  sharding rules, fault tolerance, hub-replication gather

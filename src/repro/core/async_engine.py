@@ -20,8 +20,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from .compat import shard_map
 
 from .intersect import count_bsearch_jnp, count_pairwise_jnp, tpu_regime_rule
 from .rma import ShardedLCCProblem

@@ -36,6 +36,8 @@ __all__ = [
     "ClampiCache",
     "StaticDegreeCache",
     "build_static_degree_cache",
+    "StaticCacheRefresh",
+    "refresh_static_degree_cache",
 ]
 
 
@@ -64,6 +66,7 @@ class CacheStats:
     compulsory_misses: int = 0
     evictions: int = 0
     flushes: int = 0
+    invalidations: int = 0  # coherence: entries dropped because stale
     bytes_hit: int = 0
     bytes_missed: int = 0
     comm_time: float = 0.0
@@ -250,6 +253,18 @@ class ClampiCache:
             self.table_slots *= 2
             self.flush()
 
+    def invalidate(self, key: int) -> bool:
+        """Coherence hook: drop ``key`` because its backing data changed
+        (streaming updates mutate adjacency rows in place). Unlike an
+        eviction this is a *correctness* removal — the next get is a miss
+        that refetches fresh data. Returns True if an entry was dropped."""
+        e = self.entries.pop(key, None)
+        if e is None:
+            return False
+        self._dealloc(e.addr, e.size)
+        self.stats.invalidations += 1
+        return True
+
     def flush(self) -> None:
         self.entries.clear()
         self.free = [(0, self.capacity)]
@@ -307,5 +322,78 @@ def build_static_degree_cache(
     score = degrees if score_fn is None else score_fn(degrees)
     if c <= 0:
         return StaticDegreeCache(vertex_ids=np.zeros((0,), np.int64))
-    top = np.argpartition(score, n - c)[n - c :]
+    # stable tie-break by vertex id: equal-score residency must not
+    # reshuffle between calls, or streaming rescores would count tie
+    # noise as drift (power-law graphs have large tie classes).
+    order = np.lexsort((np.arange(n), score))
+    top = order[n - c :]
     return StaticDegreeCache(vertex_ids=np.sort(top.astype(np.int64)))
+
+
+# --------------------------------------------------------------------------
+# Streaming coherence for the static cache.
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class StaticCacheRefresh:
+    """Outcome of rescoring a ``StaticDegreeCache`` after updates.
+
+    stale_ids:   resident vertices whose adjacency changed — their cached
+                 rows must be refetched regardless of ranking (correctness).
+    evicted:     residents that fell out of the top-C by degree score.
+    admitted:    vertices newly promoted into the top-C.
+    rebuilt:     whether a new resident set was installed.
+    """
+
+    cache: StaticDegreeCache
+    stale_ids: np.ndarray
+    evicted: int
+    admitted: int
+    rebuilt: bool
+
+    @property
+    def stale_rows(self) -> int:
+        return int(self.stale_ids.shape[0])
+
+
+def refresh_static_degree_cache(
+    cache: StaticDegreeCache,
+    degrees: np.ndarray,
+    changed_ids: np.ndarray,
+    *,
+    rebuild_fraction: float = 0.0,
+    score_fn: Optional[Callable[[np.ndarray], np.ndarray]] = None,
+) -> StaticCacheRefresh:
+    """Rescore/invalidate cache residency after degrees changed.
+
+    The paper's Observations 3.1/3.2 motivate degree as the residency
+    score; once edges stream in, the score *drifts*. Residents whose
+    adjacency changed are stale (rows must be refreshed in place); when
+    the drift in the top-C membership exceeds ``rebuild_fraction`` of
+    capacity, the resident set itself is rebuilt from current degrees.
+
+    The full O(n log n) rescoring pass is skipped when no membership
+    change is possible: no resident changed and every changed outsider
+    still scores below the weakest resident — the common case for small
+    batches, keeping per-batch cost proportional to the delta.
+    """
+    changed = np.asarray(changed_ids, np.int64)
+    resident_mask = cache.slot_of(changed) >= 0
+    stale_ids = changed[resident_mask]
+    c = cache.capacity_rows
+    if c == 0 or changed.size == 0:
+        return StaticCacheRefresh(cache, stale_ids, 0, 0, False)
+    score = np.asarray(degrees) if score_fn is None else score_fn(degrees)
+    if stale_ids.size == 0:
+        outsiders = changed[~resident_mask]
+        if score[outsiders].max() < score[cache.vertex_ids].min():
+            return StaticCacheRefresh(cache, stale_ids, 0, 0, False)
+    fresh = build_static_degree_cache(degrees, c, score_fn=score_fn)
+    drift = np.setdiff1d(cache.vertex_ids, fresh.vertex_ids, assume_unique=True)
+    if drift.size and drift.size >= rebuild_fraction * c:
+        admitted = np.setdiff1d(
+            fresh.vertex_ids, cache.vertex_ids, assume_unique=True
+        )
+        return StaticCacheRefresh(
+            fresh, stale_ids, int(drift.size), int(admitted.size), True
+        )
+    return StaticCacheRefresh(cache, stale_ids, 0, 0, False)

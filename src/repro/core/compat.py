@@ -1,0 +1,33 @@
+"""Version-compatibility shims for JAX APIs that moved between releases.
+
+``shard_map`` lived in ``jax.experimental.shard_map`` (with a ``check_rep``
+kwarg) before being promoted to ``jax.shard_map`` (where the kwarg became
+``check_vma``). Engine code imports the wrapper below and always passes
+``check_vma``; the shim renames it for older installs.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+__all__ = ["shard_map"]
+
+try:  # jax >= 0.6: top-level export
+    _shard_map = jax.shard_map
+except AttributeError:  # jax 0.4.x / 0.5.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_HAS_CHECK_VMA = "check_vma" in inspect.signature(_shard_map).parameters
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    if _HAS_CHECK_VMA:
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )

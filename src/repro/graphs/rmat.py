@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["rmat_edges", "rmat_graph"]
+__all__ = ["rmat_edges", "rmat_graph", "rmat_stream"]
 
 A, B, C, D = 0.57, 0.19, 0.19, 0.05
 
@@ -51,3 +51,56 @@ def rmat_graph(scale: int, edge_factor: int, *, seed: int = 0, undirected=True):
 
     e = rmat_edges(scale, edge_factor, seed=seed)
     return from_edges(e, 1 << scale, undirected=undirected)
+
+
+def rmat_stream(
+    scale: int,
+    edge_factor: int,
+    *,
+    batch_size: int,
+    delete_frac: float = 0.0,
+    seed: int = 0,
+    shuffle: bool = True,
+):
+    """Yield ``EdgeBatch`` update batches replaying an R-MAT edge stream.
+
+    The full R-MAT edge list (raw — duplicates and self-loops included, as
+    a real ingest stream would carry them) arrives as insertions in
+    ``batch_size``-op batches; with ``delete_frac > 0`` each batch also
+    deletes that fraction of ops sampled from edges inserted by *earlier*
+    batches (LiveJournal-style churn). Ops within a batch are shuffled so
+    normalization sees interleaved inserts/deletes.
+    """
+    from ..streaming.updates import DELETE, INSERT, EdgeBatch
+
+    edges = rmat_edges(scale, edge_factor, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    if shuffle:
+        rng.shuffle(edges, axis=0)
+    inserted: list = []  # canonical tuples from prior batches
+    pos = 0
+    while pos < edges.shape[0]:
+        ins = edges[pos : pos + batch_size]
+        pos += ins.shape[0]
+        n_del = int(delete_frac * ins.shape[0])
+        if n_del and inserted:
+            pick = rng.integers(0, len(inserted), size=min(n_del, len(inserted)))
+            dels = np.array([inserted[i] for i in pick], np.int64)
+        else:
+            dels = np.zeros((0, 2), np.int64)
+        u = np.concatenate([ins[:, 0], dels[:, 0]])
+        v = np.concatenate([ins[:, 1], dels[:, 1]])
+        op = np.concatenate(
+            [
+                np.full(ins.shape[0], INSERT, np.int8),
+                np.full(dels.shape[0], DELETE, np.int8),
+            ]
+        )
+        if shuffle:
+            perm = rng.permutation(u.size)
+            u, v, op = u[perm], v[perm], op[perm]
+        mask = ins[:, 0] != ins[:, 1]
+        lo = np.minimum(ins[mask, 0], ins[mask, 1])
+        hi = np.maximum(ins[mask, 0], ins[mask, 1])
+        inserted.extend(zip(lo.tolist(), hi.tolist()))
+        yield EdgeBatch(u=u, v=v, op=op)

@@ -1,0 +1,162 @@
+"""Cache coherence for the streaming setting.
+
+The static pipeline's cache science (paper §II-F, §III-B) assumes a
+read-only graph: rows are fetched once and never change. Streaming breaks
+that — every applied edge mutates two adjacency rows — so this module
+extends both cache layers with coherence:
+
+1. ``ClampiCache`` replay: each batch's delta row-pair reads are replayed
+   through a CLaMPI simulator exactly like the static access stream
+   (``rma.simulate_rma_lcc``), but stale entries — cached rows of
+   vertices whose adjacency just changed — are *invalidated* first, so
+   hit/miss/eviction/invalidations statistics stay meaningful.
+2. ``StaticDegreeCache`` rescoring: degree drift moves vertices in and
+   out of the top-C residency set; ``refresh_static_degree_cache``
+   invalidates stale resident rows and rebuilds the set when drift
+   crosses a threshold.
+
+The incremental engine reads from the authoritative ``DynamicCSR``; this
+layer models what a distributed deployment (1D partition, remote pulls)
+would pay, reporting per-stream hit rate and modeled communication time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from ..core.cache import (
+    ClampiCache,
+    NetworkModel,
+    StaticDegreeCache,
+    build_static_degree_cache,
+    refresh_static_degree_cache,
+)
+from ..core.partition import partition_1d
+
+__all__ = ["CoherenceReport", "StreamingCacheCoherence"]
+
+ID_BYTES = 4
+
+
+@dataclasses.dataclass
+class CoherenceReport:
+    """Cumulative statistics over the replayed delta access stream."""
+
+    local_reads: int = 0
+    static_hits: int = 0
+    clampi_hits: int = 0
+    clampi_misses: int = 0
+    invalidations: int = 0  # ClampiCache entries dropped as stale
+    static_stale_rows: int = 0  # resident rows refreshed in place
+    static_evictions: int = 0  # residents dropped by rescoring
+    static_rebuilds: int = 0
+    comm_time: float = 0.0  # modeled, misses + refreshes
+
+    @property
+    def remote_reads(self) -> int:
+        return self.static_hits + self.clampi_hits + self.clampi_misses
+
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of remote row reads served by either cache layer."""
+        r = self.remote_reads
+        return (self.static_hits + self.clampi_hits) / r if r else 0.0
+
+
+class StreamingCacheCoherence:
+    """Replays each batch's delta access stream through both cache layers.
+
+    ``p`` simulated ranks give the 1D-partition notion of *remote*: the
+    owner of u processes edge (u, v) and pulls row v iff owner(v) differs
+    and v is not static-cache resident.
+    """
+
+    def __init__(
+        self,
+        n: int,
+        degrees: np.ndarray,
+        *,
+        p: int = 4,
+        cache_rows: int = 256,
+        clampi_bytes: int = 1 << 20,
+        table_slots: Optional[int] = None,
+        rebuild_fraction: float = 0.05,
+        network: Optional[NetworkModel] = None,
+    ):
+        self.part = partition_1d(n, p)
+        self.p = p
+        self.net = network or NetworkModel()
+        self.rebuild_fraction = rebuild_fraction
+        self.static: StaticDegreeCache = build_static_degree_cache(
+            np.asarray(degrees), cache_rows
+        )
+        self.cache_rows = cache_rows
+        self.clampi = ClampiCache(
+            clampi_bytes,
+            table_slots or max(1, n // 4),
+            mode="always",
+            network=self.net,
+        )
+        self.report = CoherenceReport()
+
+    def on_batch(
+        self, ins: np.ndarray, dele: np.ndarray, store
+    ) -> CoherenceReport:
+        """Called by the engine after applying a batch (``ins``/``dele``
+        are the effective ``[K, 2]`` edge arrays; ``store`` holds the
+        post-batch graph). Returns the cumulative report."""
+        rep = self.report
+        pairs = np.concatenate([ins, dele], axis=0)
+        if pairs.shape[0] == 0:
+            return rep
+        changed = np.unique(pairs.ravel())
+
+        # 1. coherence: cached copies of mutated rows are stale.
+        for v in changed:
+            self.clampi.invalidate(int(v))
+
+        # 2. replay the delta access stream (both directions of each
+        #    edge: owner(u) pulls row v and owner(v) pulls row u).
+        deg = store.degrees
+        a = np.concatenate([pairs[:, 0], pairs[:, 1]])
+        b = np.concatenate([pairs[:, 1], pairs[:, 0]])
+        owners_a = self.part.owner(a)
+        owners_b = self.part.owner(b)
+        remote = owners_a != owners_b
+        rep.local_reads += int(np.count_nonzero(~remote))
+        b_rem = b[remote]
+        in_static = self.static.slot_of(b_rem) >= 0
+        rep.static_hits += int(np.count_nonzero(in_static))
+        for v in b_rem[~in_static]:
+            size = int(deg[int(v)]) * ID_BYTES
+            self.clampi.get(int(v), size, score=float(deg[int(v)]))
+
+        # 3. rescore static residency against the drifted degrees.
+        refresh = refresh_static_degree_cache(
+            self.static,
+            deg,
+            changed,
+            rebuild_fraction=self.rebuild_fraction,
+        )
+        rep.static_stale_rows += refresh.stale_rows
+        # refreshing a stale resident row = one remote read of fresh data
+        rep.comm_time += float(
+            sum(self.net.remote(int(deg[int(v)]) * ID_BYTES)
+                for v in refresh.stale_ids)
+        )
+        if refresh.rebuilt:
+            self.static = refresh.cache
+            rep.static_evictions += refresh.evicted
+            rep.static_rebuilds += 1
+
+        st = self.clampi.stats
+        rep.clampi_hits = st.hits
+        rep.clampi_misses = st.misses
+        rep.invalidations = st.invalidations
+        return rep
+
+    @property
+    def total_comm_time(self) -> float:
+        return self.report.comm_time + self.clampi.stats.comm_time

@@ -1,0 +1,212 @@
+"""DynamicCSR: a CSR graph plus delta buffers, with periodic compaction.
+
+The static pipeline's ``CSRGraph`` is immutable (two packed arrays). A
+live graph absorbs updates far faster than it can afford full rebuilds,
+so ``DynamicCSR`` keeps
+
+- ``base``     — the last compacted ``CSRGraph`` (sorted rows), and
+- ``_added``   — per-vertex sorted arrays of neighbors inserted since,
+- ``_removed`` — per-vertex sets of base neighbors deleted since.
+
+``row(v)`` merges the three on demand (sorted, deduplicated — the same
+invariants every intersection kernel relies on). ``compact()`` folds the
+deltas back into a fresh ``CSRGraph``; ``maybe_compact()`` triggers when
+the delta exceeds a configurable fraction of the base edges, which keeps
+merged-row reads amortized O(deg).
+
+Invariants (matching ``core/csr.py``):
+- vertices are ids in ``[0, n)``; rows sorted ascending, deduplicated,
+  loop-free; both directions stored for undirected edges.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Optional
+
+import numpy as np
+
+from ..core.csr import CSRGraph, from_edges
+
+__all__ = ["DynamicCSR"]
+
+
+class DynamicCSR:
+    def __init__(self, base: CSRGraph, *, compact_threshold: float = 0.25):
+        self.base = base
+        self.n = base.n
+        self.compact_threshold = float(compact_threshold)
+        self._added: Dict[int, np.ndarray] = {}
+        self._removed: Dict[int, set] = {}
+        self._degree = base.degrees.copy()
+        self._delta_edges = 0  # directed insert+delete entries outstanding
+        self.n_compactions = 0
+
+    # ---------------- constructors ----------------
+    @staticmethod
+    def from_csr(csr: CSRGraph, *, compact_threshold: float = 0.25) -> "DynamicCSR":
+        return DynamicCSR(csr, compact_threshold=compact_threshold)
+
+    @staticmethod
+    def empty(n: int, *, compact_threshold: float = 0.25) -> "DynamicCSR":
+        base = CSRGraph(
+            offsets=np.zeros(n + 1, np.int64),
+            adjacencies=np.zeros((0,), np.int32),
+            n=n,
+        )
+        return DynamicCSR(base, compact_threshold=compact_threshold)
+
+    # ---------------- queries ----------------
+    @property
+    def m(self) -> int:
+        """Number of stored (directed) edges."""
+        return int(self._degree.sum())
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return self._degree
+
+    def degree(self, v: int) -> int:
+        return int(self._degree[v])
+
+    @property
+    def max_degree(self) -> int:
+        return int(self._degree.max()) if self.n else 0
+
+    @property
+    def delta_edges(self) -> int:
+        return self._delta_edges
+
+    def row(self, v: int) -> np.ndarray:
+        """Merged sorted adjacency row of ``v`` (int32)."""
+        r = self.base.row(v)
+        rem = self._removed.get(v)
+        if rem:
+            r = r[~np.isin(r, np.fromiter(rem, np.int64, len(rem)))]
+        add = self._added.get(v)
+        if add is not None and add.size:
+            r = np.sort(np.concatenate([r.astype(np.int64), add])).astype(
+                np.int32
+            )
+        return r
+
+    def has_edge(self, u: int, v: int) -> bool:
+        return bool(self.has_edges(np.array([u]), np.array([v]))[0])
+
+    def has_edges(self, u: np.ndarray, v: np.ndarray) -> np.ndarray:
+        """Vectorized membership: is (u[i], v[i]) currently an edge?"""
+        u = np.asarray(u, np.int64)
+        v = np.asarray(v, np.int64)
+        out = np.zeros(u.shape, bool)
+        for i in range(u.size):
+            ui, vi = int(u[i]), int(v[i])
+            add = self._added.get(ui)
+            if add is not None and add.size and _sorted_contains(add, vi):
+                out[i] = True
+                continue
+            r = self.base.row(ui)
+            if r.size and _sorted_contains(r, vi):
+                rem = self._removed.get(ui)
+                out[i] = not (rem and vi in rem)
+        return out
+
+    # ---------------- mutation ----------------
+    def insert_edges(self, pairs: np.ndarray) -> None:
+        """Insert canonical (u < v) edges known to be absent (both dirs)."""
+        pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
+        for u, v in pairs:
+            self._insert_directed(int(u), int(v))
+            self._insert_directed(int(v), int(u))
+
+    def delete_edges(self, pairs: np.ndarray) -> None:
+        """Delete canonical (u < v) edges known to be present (both dirs)."""
+        pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
+        for u, v in pairs:
+            self._delete_directed(int(u), int(v))
+            self._delete_directed(int(v), int(u))
+
+    def _insert_directed(self, u: int, v: int) -> None:
+        rem = self._removed.get(u)
+        if rem and v in rem:  # re-insert of a base edge deleted earlier
+            rem.discard(v)
+            if not rem:
+                del self._removed[u]
+            self._delta_edges -= 1  # cancels an outstanding removal
+        else:
+            add = self._added.get(u)
+            if add is None:
+                self._added[u] = np.array([v], np.int64)
+            else:
+                pos = int(np.searchsorted(add, v))
+                self._added[u] = np.insert(add, pos, v)
+            self._delta_edges += 1
+        self._degree[u] += 1
+
+    def _delete_directed(self, u: int, v: int) -> None:
+        add = self._added.get(u)
+        if add is not None and add.size and _sorted_contains(add, v):
+            self._added[u] = np.delete(add, int(np.searchsorted(add, v)))
+            if not self._added[u].size:
+                del self._added[u]
+            self._delta_edges -= 1  # cancels an outstanding insert
+        else:
+            self._removed.setdefault(u, set()).add(v)
+            self._delta_edges += 1
+        self._degree[u] -= 1
+
+    # ---------------- compaction ----------------
+    def to_csr(self) -> CSRGraph:
+        """Compacted snapshot (does not mutate the store)."""
+        if not self._added and not self._removed:
+            return self.base
+        rows = [self.row(v) for v in range(self.n)]
+        counts = np.array([r.size for r in rows], np.int64)
+        offsets = np.zeros(self.n + 1, np.int64)
+        np.cumsum(counts, out=offsets[1:])
+        adj = (
+            np.concatenate(rows).astype(np.int32)
+            if counts.sum()
+            else np.zeros((0,), np.int32)
+        )
+        return CSRGraph(offsets=offsets, adjacencies=adj, n=self.n)
+
+    def compact(self) -> CSRGraph:
+        """Fold deltas into a fresh base CSR; returns the new base."""
+        self.base = self.to_csr()
+        self._added.clear()
+        self._removed.clear()
+        self._delta_edges = 0
+        self.n_compactions += 1
+        assert np.array_equal(self.base.degrees, self._degree)
+        return self.base
+
+    def maybe_compact(self) -> bool:
+        """Compact when the outstanding delta exceeds the threshold
+        fraction of the base edge count."""
+        base_m = max(self.base.m, 1)
+        if self._delta_edges > self.compact_threshold * base_m:
+            self.compact()
+            return True
+        return False
+
+    # ---------------- device layout ----------------
+    def padded_rows(
+        self,
+        vertices: Iterable[int],
+        width: Optional[int] = None,
+        *,
+        sentinel: Optional[int] = None,
+    ) -> np.ndarray:
+        """Padded ``[len(vertices), width]`` sorted row matrix (cf.
+        ``core.csr.to_padded_rows``), built from the merged rows."""
+        vs = np.asarray(list(vertices), np.int64)
+        w = int(width if width is not None else max(self.max_degree, 1))
+        sent = int(self.n if sentinel is None else sentinel)
+        out = np.full((vs.size, w), sent, np.int32)
+        for i, v in enumerate(vs):
+            r = self.row(int(v))[:w]
+            out[i, : r.size] = r
+        return out
+
+
+def _sorted_contains(arr: np.ndarray, x: int) -> bool:
+    i = int(np.searchsorted(arr, x))
+    return i < arr.size and int(arr[i]) == x

@@ -1,7 +1,15 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+``hypothesis`` is an optional test dependency (see tests/requirements-
+optional.txt); the module skips cleanly when it is not installed so the
+tier-1 suite never dies at collection.
+"""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.cache import ClampiCache, build_static_degree_cache
 from repro.core.csr import from_edges
