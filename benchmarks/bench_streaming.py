@@ -69,12 +69,69 @@ def _replay(scale, edge_factor, batch_size, *, cached, delete_frac=0.15):
     return row, eng
 
 
+def _naive_insert_directed(added, removed, u, v):
+    """Reference per-edge mutation (the pre-vectorization DynamicCSR hot
+    path): one np.insert per directed edge."""
+    rem = removed.get(u)
+    if rem is not None and rem.size and v in rem:
+        removed[u] = rem[rem != v]
+    else:
+        add = added.get(u)
+        if add is None:
+            added[u] = np.array([v], np.int64)
+        else:
+            added[u] = np.insert(add, int(np.searchsorted(add, v)), v)
+
+
+def bench_store_mutation(scale=11, edge_factor=4, batch_size=4096, seed=0):
+    """Vectorized group-by-vertex DynamicCSR mutations vs the naive
+    per-edge np.insert reference, on identical insert batches."""
+    from repro.streaming import DynamicCSR
+
+    n = 1 << scale
+    rng = np.random.default_rng(seed)
+    e = rng.integers(0, n, size=(batch_size * 8, 2))
+    e = e[e[:, 0] != e[:, 1]]
+    lo, hi = np.minimum(e[:, 0], e[:, 1]), np.maximum(e[:, 0], e[:, 1])
+    key = np.unique(lo * n + hi)
+    pairs = np.stack([key // n, key % n], 1)
+
+    store = DynamicCSR.empty(n)
+    t0 = time.perf_counter()
+    for i in range(0, pairs.shape[0], batch_size):
+        store.insert_edges(pairs[i : i + batch_size])
+    t_vec = time.perf_counter() - t0
+
+    added, removed = {}, {}
+    t0 = time.perf_counter()
+    for u, v in pairs:
+        _naive_insert_directed(added, removed, int(u), int(v))
+        _naive_insert_directed(added, removed, int(v), int(u))
+    t_naive = time.perf_counter() - t0
+
+    # both paths must build identical delta buffers
+    assert len(added) == len(store._added)
+    for u, arr in store._added.items():
+        assert np.array_equal(arr, added[u])
+    ups = int(pairs.shape[0])
+    return {
+        "edges": ups,
+        "vectorized_upd_per_sec": round(ups / max(t_vec, 1e-9)),
+        "naive_upd_per_sec": round(ups / max(t_naive, 1e-9)),
+        "speedup": round(t_naive / max(t_vec, 1e-9), 1),
+    }
+
+
 def run(quick: bool = True):
     scale = 9 if quick else 12
     edge_factor = 8
     batch_sizes = (64, 256, 1024) if quick else (256, 1024, 4096, 16384)
     out = {"scale": scale, "edge_factor": edge_factor, "rows": [],
            "paper_ref": "streaming extension (Tangwongsan et al.)"}
+    out["store_mutation"] = bench_store_mutation(
+        scale=10 if quick else 12, batch_size=1024 if quick else 4096
+    )
+    out["store_vectorized_speedup"] = out["store_mutation"]["speedup"]
     for bs in batch_sizes:
         for cached in (False, True):
             row, _ = _replay(scale, edge_factor, bs, cached=cached)

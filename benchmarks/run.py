@@ -28,6 +28,7 @@ def main(argv=None):
         bench_reuse,
         bench_roofline,
         bench_scores,
+        bench_serving,
         bench_shared_scaling,
         bench_streaming,
         bench_strong_scaling,
@@ -41,6 +42,7 @@ def main(argv=None):
         "reuse_fig1_4_5": lambda: bench_reuse.run(quick),
         "strong_scaling_fig9_10": lambda: bench_strong_scaling.run(quick),
         "streaming_updates": lambda: bench_streaming.run(quick),
+        "serving_queries": lambda: bench_serving.run(quick),
         "roofline": lambda: bench_roofline.run(),
     }
     if args.only:
@@ -115,6 +117,26 @@ def checklist(results):
             f"{fs['incremental_speedup_vs_recount']}x faster than "
             f"per-batch recount",
             fs["incremental_speedup_vs_recount"] > 1.0,
+        ))
+    if "store_vectorized_speedup" in fs:
+        checks.append((
+            f"streaming: vectorized DynamicCSR mutations "
+            f"{fs['store_vectorized_speedup']}x vs per-edge np.insert",
+            fs["store_vectorized_speedup"] > 1.0,
+        ))
+    sv = results.get("serving_queries", {})
+    if "microbatch_speedup_zipf" in sv:
+        checks.append((
+            f"serving: microbatching {sv['microbatch_speedup_zipf']}x vs "
+            f"one-query-at-a-time on Zipf (target >= 5x)",
+            sv["microbatch_speedup_zipf"] >= 5.0,
+        ))
+        checks.append((
+            f"serving: degree-scored cache cuts modeled remote time "
+            f"{sv['cache_comm_reduction_zipf']:.0%} on Zipf "
+            f"(hit rate {sv['hit_rate_zipf']:.0%})",
+            sv["cache_comm_reduction_zipf"] > 0.2
+            and sv["hit_rate_zipf"] > 0.2,
         ))
     for msg, ok in checks:
         print(("PASS " if ok else "FAIL ") + msg)

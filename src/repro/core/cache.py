@@ -265,6 +265,17 @@ class ClampiCache:
         self.stats.invalidations += 1
         return True
 
+    def invalidate_many(self, keys) -> int:
+        """Batch coherence hook (one streaming update batch mutates many
+        rows). Returns the number of entries dropped."""
+        return sum(self.invalidate(int(k)) for k in keys)
+
+    def contains(self, key: int) -> bool:
+        """Residency probe without touching LRU/statistics — lets a
+        payload-carrying layer (serving row provider) mirror this cache's
+        admission/eviction decisions."""
+        return key in self.entries
+
     def flush(self) -> None:
         self.entries.clear()
         self.free = [(0, self.capacity)]

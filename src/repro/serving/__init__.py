@@ -1,0 +1,35 @@
+"""Online graph query serving over the 1D-partitioned live graph.
+
+Turns the batch-epoch reproduction into a request-driven service:
+
+- ``requests``  — ``Query``/``QueryResult`` types (lcc, triangles,
+                  common_neighbors, top_k_lcc)
+- ``provider``  — row read path: ``DirectRowProvider`` (uncached) and
+                  ``CacheBackedRowProvider`` (degree-scored ClampiCache
+                  carrying real row payloads, coherence-invalidated)
+- ``engine``    — ``QueryEngine``: batched point-query execution with
+                  batch-wide row-fetch + pair dedup over the Pallas
+                  intersect kernels
+- ``scheduler`` — ``MicrobatchScheduler``: request coalescing + p50/p99
+                  latency accounting
+- ``workload``  — uniform / Zipf(hub-skewed) / read-write generators
+- ``service``   — ``LiveQueryService``: queries + streaming updates over
+                  one shared store with a verified staleness bound
+"""
+from .requests import Query, QueryKind, QueryResult  # noqa: F401
+from .provider import (  # noqa: F401
+    CacheBackedRowProvider,
+    DirectRowProvider,
+    ProviderCoherenceHook,
+    ProviderStats,
+)
+from .engine import QueryEngine  # noqa: F401
+from .scheduler import MicrobatchScheduler  # noqa: F401
+from .metrics import LatencyRecorder, LatencySummary  # noqa: F401
+from .workload import (  # noqa: F401
+    ReadWriteEvent,
+    make_queries,
+    read_write_stream,
+    sample_vertices,
+)
+from .service import LiveQueryService  # noqa: F401

@@ -1,0 +1,63 @@
+"""Latency/throughput accounting for the query service.
+
+Percentiles use the 'lower' interpolation so a reported p99 is an
+actually-observed latency, not an average of two observations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+__all__ = ["LatencySummary", "LatencyRecorder"]
+
+
+@dataclasses.dataclass
+class LatencySummary:
+    count: int
+    wall_s: float
+    throughput_qps: float
+    p50_ms: float
+    p90_ms: float
+    p99_ms: float
+    max_ms: float
+
+    def as_dict(self) -> dict:
+        return {
+            k: (round(v, 4) if isinstance(v, float) else v)
+            for k, v in dataclasses.asdict(self).items()
+        }
+
+
+class LatencyRecorder:
+    def __init__(self):
+        self._lat: List[float] = []
+        self.wall_s = 0.0
+
+    def record(self, latency_s: float) -> None:
+        self._lat.append(float(latency_s))
+
+    def record_wall(self, seconds: float) -> None:
+        self.wall_s += float(seconds)
+
+    @property
+    def count(self) -> int:
+        return len(self._lat)
+
+    def summary(self) -> LatencySummary:
+        lat = np.asarray(self._lat, np.float64)
+        if lat.size == 0:
+            return LatencySummary(0, self.wall_s, 0.0, 0.0, 0.0, 0.0, 0.0)
+        p50, p90, p99 = np.percentile(
+            lat, [50, 90, 99], method="lower"
+        )
+        return LatencySummary(
+            count=int(lat.size),
+            wall_s=self.wall_s,
+            throughput_qps=lat.size / max(self.wall_s, 1e-12),
+            p50_ms=float(p50) * 1e3,
+            p90_ms=float(p90) * 1e3,
+            p99_ms=float(p99) * 1e3,
+            max_ms=float(lat.max()) * 1e3,
+        )

@@ -1,0 +1,77 @@
+"""Microbatching scheduler: coalesce concurrent queries into one batch.
+
+Point queries arrive one at a time but are cheapest answered together:
+a batch shares row fetches (the provider is called once per distinct
+vertex per batch), shares pair intersections (canonical dedup across
+queries), and amortizes kernel/vectorization overhead over the whole
+padded batch. The scheduler
+
+- queues submitted queries with their arrival timestamp,
+- drains them in windows of at most ``max_batch`` through
+  ``QueryEngine.execute_batch``, and
+- stamps each result with its submit-to-completion latency, feeding the
+  p50/p99 ``LatencyRecorder``.
+
+``max_batch=1`` degenerates to one-query-at-a-time serving — the
+baseline the serving benchmark compares against.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Sequence
+
+from .engine import QueryEngine
+from .metrics import LatencyRecorder, LatencySummary
+from .requests import Query, QueryResult
+
+__all__ = ["MicrobatchScheduler"]
+
+
+class MicrobatchScheduler:
+    def __init__(self, engine: QueryEngine, *, max_batch: int = 64):
+        assert max_batch >= 1
+        self.engine = engine
+        self.max_batch = int(max_batch)
+        self._pending: List[tuple] = []  # (query, t_submit)
+        self.recorder = LatencyRecorder()
+        self.n_batches = 0
+
+    # ---------------- request path ----------------
+    def submit(self, query: Query) -> None:
+        self._pending.append((query, time.perf_counter()))
+
+    def submit_many(self, queries: Sequence[Query]) -> None:
+        t = time.perf_counter()
+        self._pending.extend((q, t) for q in queries)
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def flush(self) -> List[QueryResult]:
+        """Drain the queue in ``max_batch`` windows; returns all results
+        in submission order."""
+        out: List[QueryResult] = []
+        while self._pending:
+            chunk = self._pending[: self.max_batch]
+            t0 = time.perf_counter()
+            results = self.engine.execute_batch([q for q, _ in chunk])
+            t1 = time.perf_counter()
+            # dequeue only after success: an engine error must leave the
+            # chunk queued (visible, retryable), not silently dropped
+            del self._pending[: self.max_batch]
+            self.recorder.record_wall(t1 - t0)
+            self.n_batches += 1
+            for (q, t_sub), r in zip(chunk, results):
+                r.latency_s = t1 - t_sub
+                self.recorder.record(r.latency_s)
+            out.extend(results)
+        return out
+
+    def run(self, queries: Sequence[Query]) -> List[QueryResult]:
+        """Closed-loop convenience: submit all, drain to completion."""
+        self.submit_many(queries)
+        return self.flush()
+
+    def latency_summary(self) -> LatencySummary:
+        return self.recorder.summary()

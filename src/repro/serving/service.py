@@ -1,0 +1,120 @@
+"""LiveQueryService: queries and streaming updates over one shared graph.
+
+Wires the pieces together so freshness is a property, not a hope:
+
+- one ``DynamicCSR`` store, owned by a ``StreamingLCCEngine`` that keeps
+  exact per-vertex triangle counts + LCC under update batches;
+- a row provider (cache-backed by default) that the ``QueryEngine``
+  reads through;
+- a coherence hook on the streaming engine that, after every applied
+  batch, invalidates the provider's cached copies of every mutated row —
+  so queries observe the live graph with a staleness bound of zero
+  applied-but-unobserved batches (``verify()`` checks it).
+
+``apply_updates`` and ``flush`` must not interleave (single-writer
+semantics — the scheduler drains fully between update batches), which is
+exactly the batch-boundary observability the streaming layer defines.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from ..core.csr import CSRGraph
+from ..streaming.coherence import StreamingCacheCoherence
+from ..streaming.incremental import BatchResult, StreamingLCCEngine
+from ..streaming.updates import EdgeBatch
+from .engine import QueryEngine
+from .provider import (
+    CacheBackedRowProvider,
+    DirectRowProvider,
+    ProviderCoherenceHook,
+)
+from .requests import Query, QueryResult
+from .scheduler import MicrobatchScheduler
+
+__all__ = ["LiveQueryService"]
+
+
+class LiveQueryService:
+    def __init__(
+        self,
+        csr: CSRGraph,
+        *,
+        p: int = 4,
+        rank: int = 0,
+        cache_bytes: int = 1 << 20,
+        max_batch: int = 64,
+        use_kernel: Optional[bool] = None,
+        interpret: Optional[bool] = None,
+        coherence: Optional[StreamingCacheCoherence] = None,
+        provider=None,
+        uncached: bool = False,
+        stream_kw: Optional[dict] = None,
+    ):
+        hook = coherence or ProviderCoherenceHook()
+        self.stream = StreamingLCCEngine(
+            csr,
+            coherence=hook,
+            use_kernel=bool(use_kernel),
+            interpret=interpret,
+            **(stream_kw or {}),
+        )
+        self.store = self.stream.store
+        if provider is None:
+            provider = (
+                DirectRowProvider(self.store, p=p, rank=rank)
+                if uncached
+                else CacheBackedRowProvider(
+                    self.store, p=p, rank=rank, capacity_bytes=cache_bytes
+                )
+            )
+        self.provider = provider
+        hook.attach_provider(self.provider)
+        self.coherence = coherence
+        self.engine = QueryEngine(
+            self.store,
+            self.provider,
+            use_kernel=use_kernel,
+            interpret=interpret,
+            lcc_source=lambda: self.stream.lcc,
+        )
+        self.scheduler = MicrobatchScheduler(self.engine, max_batch=max_batch)
+
+    # ---------------- write path ----------------
+    def apply_updates(self, batch: EdgeBatch) -> BatchResult:
+        assert self.scheduler.pending == 0, (
+            "drain queries before applying updates (single-writer)"
+        )
+        return self.stream.apply_batch(batch)
+
+    # ---------------- read path ----------------
+    def submit(self, query: Query) -> None:
+        self.scheduler.submit(query)
+
+    def submit_many(self, queries: Sequence[Query]) -> None:
+        self.scheduler.submit_many(queries)
+
+    def flush(self) -> List[QueryResult]:
+        return self.scheduler.flush()
+
+    def query(self, query: Query) -> QueryResult:
+        """Synchronous single query (no microbatching)."""
+        return self.engine.execute_batch([query])[0]
+
+    # ---------------- invariants ----------------
+    @property
+    def triangle_count(self) -> int:
+        return self.stream.triangle_count
+
+    def verify(self) -> None:
+        """Streaming state bit-exact vs recount AND zero stale cached
+        rows in the provider — the service-level freshness contract."""
+        self.stream.verify()
+        cached, stale = self.provider.audit_freshness()
+        if stale:
+            raise AssertionError(
+                f"provider staleness bound violated: {stale}/{cached} "
+                "cached rows diverge from the store"
+            )

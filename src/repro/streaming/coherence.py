@@ -100,6 +100,13 @@ class StreamingCacheCoherence:
             network=self.net,
         )
         self.report = CoherenceReport()
+        self.providers: list = []  # serving row providers to notify
+
+    def attach_provider(self, provider) -> None:
+        """Register a serving row provider (``CacheBackedRowProvider``)
+        whose cached payloads must be invalidated on every applied
+        batch — the freshness contract of the query service."""
+        self.providers.append(provider)
 
     def on_batch(
         self, ins: np.ndarray, dele: np.ndarray, store
@@ -113,9 +120,11 @@ class StreamingCacheCoherence:
             return rep
         changed = np.unique(pairs.ravel())
 
-        # 1. coherence: cached copies of mutated rows are stale.
-        for v in changed:
-            self.clampi.invalidate(int(v))
+        # 1. coherence: cached copies of mutated rows are stale — both in
+        #    the replay simulator and in any attached serving provider.
+        self.clampi.invalidate_many(changed)
+        for provider in self.providers:
+            provider.notify_batch(changed)
 
         # 2. replay the delta access stream (both directions of each
         #    edge: owner(u) pulls row v and owner(v) pulls row u).

@@ -6,7 +6,7 @@ so ``DynamicCSR`` keeps
 
 - ``base``     — the last compacted ``CSRGraph`` (sorted rows), and
 - ``_added``   — per-vertex sorted arrays of neighbors inserted since,
-- ``_removed`` — per-vertex sets of base neighbors deleted since.
+- ``_removed`` — per-vertex sorted arrays of base neighbors deleted since.
 
 ``row(v)`` merges the three on demand (sorted, deduplicated — the same
 invariants every intersection kernel relies on). ``compact()`` folds the
@@ -14,13 +14,19 @@ deltas back into a fresh ``CSRGraph``; ``maybe_compact()`` triggers when
 the delta exceeds a configurable fraction of the base edges, which keeps
 merged-row reads amortized O(deg).
 
+Mutations and membership queries are grouped by endpoint vertex: a batch
+touching a row pays one sorted merge (or one vectorized binary search)
+for that row, not one ``np.insert``/probe per edge — the batch cost is
+O(sum of touched-row degrees), independent of how the batch's edges are
+ordered.
+
 Invariants (matching ``core/csr.py``):
 - vertices are ids in ``[0, n)``; rows sorted ascending, deduplicated,
   loop-free; both directions stored for undirected edges.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, Optional
+from typing import Dict, Iterable, Iterator, Optional, Tuple
 
 import numpy as np
 
@@ -29,16 +35,40 @@ from ..core.csr import CSRGraph, from_edges
 __all__ = ["DynamicCSR"]
 
 
+def _in_sorted(sorted_arr: Optional[np.ndarray], values: np.ndarray) -> np.ndarray:
+    """Membership mask of ``values`` in the sorted array (vectorized)."""
+    values = np.asarray(values)
+    if sorted_arr is None or sorted_arr.size == 0:
+        return np.zeros(values.shape, bool)
+    idx = np.searchsorted(sorted_arr, values)
+    idx = np.minimum(idx, sorted_arr.size - 1)
+    return sorted_arr[idx] == values
+
+
+def _group_by_vertex(
+    a: np.ndarray, b: np.ndarray
+) -> Iterator[Tuple[int, np.ndarray, np.ndarray]]:
+    """Yield ``(u, vs, positions)`` per distinct endpoint ``u`` of the
+    directed pairs ``(a[i], b[i])`` — one group per touched row."""
+    order = np.argsort(a, kind="stable")
+    a_s, b_s = a[order], b[order]
+    starts = np.flatnonzero(np.r_[True, a_s[1:] != a_s[:-1]])
+    ends = np.r_[starts[1:], a_s.size]
+    for s, e in zip(starts, ends):
+        yield int(a_s[s]), b_s[s:e], order[s:e]
+
+
 class DynamicCSR:
     def __init__(self, base: CSRGraph, *, compact_threshold: float = 0.25):
         self.base = base
         self.n = base.n
         self.compact_threshold = float(compact_threshold)
         self._added: Dict[int, np.ndarray] = {}
-        self._removed: Dict[int, set] = {}
+        self._removed: Dict[int, np.ndarray] = {}  # sorted int64 per vertex
         self._degree = base.degrees.copy()
         self._delta_edges = 0  # directed insert+delete entries outstanding
         self.n_compactions = 0
+        self.n_mutations = 0  # monotone: bumps on every effective batch
 
     # ---------------- constructors ----------------
     @staticmethod
@@ -79,8 +109,8 @@ class DynamicCSR:
         """Merged sorted adjacency row of ``v`` (int32)."""
         r = self.base.row(v)
         rem = self._removed.get(v)
-        if rem:
-            r = r[~np.isin(r, np.fromiter(rem, np.int64, len(rem)))]
+        if rem is not None and rem.size:
+            r = r[~_in_sorted(rem, r)]
         add = self._added.get(v)
         if add is not None and add.size:
             r = np.sort(np.concatenate([r.astype(np.int64), add])).astype(
@@ -92,65 +122,92 @@ class DynamicCSR:
         return bool(self.has_edges(np.array([u]), np.array([v]))[0])
 
     def has_edges(self, u: np.ndarray, v: np.ndarray) -> np.ndarray:
-        """Vectorized membership: is (u[i], v[i]) currently an edge?"""
-        u = np.asarray(u, np.int64)
-        v = np.asarray(v, np.int64)
+        """Vectorized membership: is (u[i], v[i]) currently an edge?
+
+        Grouped by source vertex — one vectorized binary search against
+        each touched row's base/added/removed arrays."""
+        u = np.asarray(u, np.int64).ravel()
+        v = np.asarray(v, np.int64).ravel()
         out = np.zeros(u.shape, bool)
-        for i in range(u.size):
-            ui, vi = int(u[i]), int(v[i])
-            add = self._added.get(ui)
-            if add is not None and add.size and _sorted_contains(add, vi):
-                out[i] = True
-                continue
-            r = self.base.row(ui)
-            if r.size and _sorted_contains(r, vi):
-                rem = self._removed.get(ui)
-                out[i] = not (rem and vi in rem)
+        if u.size == 0:
+            return out
+        for ui, vs, pos in _group_by_vertex(u, v):
+            hit = _in_sorted(self._added.get(ui), vs)
+            in_base = _in_sorted(self.base.row(ui), vs)
+            rem = self._removed.get(ui)
+            if rem is not None and rem.size:
+                in_base &= ~_in_sorted(rem, vs)
+            out[pos] = hit | in_base
         return out
 
     # ---------------- mutation ----------------
     def insert_edges(self, pairs: np.ndarray) -> None:
         """Insert canonical (u < v) edges known to be absent (both dirs)."""
         pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
-        for u, v in pairs:
-            self._insert_directed(int(u), int(v))
-            self._insert_directed(int(v), int(u))
+        if pairs.shape[0] == 0:
+            return
+        self.n_mutations += 1
+        a = np.concatenate([pairs[:, 0], pairs[:, 1]])
+        b = np.concatenate([pairs[:, 1], pairs[:, 0]])
+        for u, vs, _ in _group_by_vertex(a, b):
+            self._insert_row(u, np.sort(vs))
+            self._degree[u] += vs.size
 
     def delete_edges(self, pairs: np.ndarray) -> None:
         """Delete canonical (u < v) edges known to be present (both dirs)."""
         pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
-        for u, v in pairs:
-            self._delete_directed(int(u), int(v))
-            self._delete_directed(int(v), int(u))
+        if pairs.shape[0] == 0:
+            return
+        self.n_mutations += 1
+        a = np.concatenate([pairs[:, 0], pairs[:, 1]])
+        b = np.concatenate([pairs[:, 1], pairs[:, 0]])
+        for u, vs, _ in _group_by_vertex(a, b):
+            self._delete_row(u, np.sort(vs))
+            self._degree[u] -= vs.size
 
-    def _insert_directed(self, u: int, v: int) -> None:
+    def _insert_row(self, u: int, vs: np.ndarray) -> None:
+        """Insert the sorted distinct neighbors ``vs`` into row ``u``."""
         rem = self._removed.get(u)
-        if rem and v in rem:  # re-insert of a base edge deleted earlier
-            rem.discard(v)
-            if not rem:
-                del self._removed[u]
-            self._delta_edges -= 1  # cancels an outstanding removal
-        else:
+        if rem is not None and rem.size:
+            # re-inserts of base edges deleted earlier cancel the removal
+            cancel = _in_sorted(rem, vs)
+            n_cancel = int(cancel.sum())
+            if n_cancel:
+                rem = rem[~_in_sorted(vs[cancel], rem)]
+                if rem.size:
+                    self._removed[u] = rem
+                else:
+                    del self._removed[u]
+                self._delta_edges -= n_cancel
+                vs = vs[~cancel]
+        if vs.size:
             add = self._added.get(u)
-            if add is None:
-                self._added[u] = np.array([v], np.int64)
-            else:
-                pos = int(np.searchsorted(add, v))
-                self._added[u] = np.insert(add, pos, v)
-            self._delta_edges += 1
-        self._degree[u] += 1
+            if add is not None and add.size:
+                vs = np.sort(np.concatenate([add, vs]))
+            self._added[u] = vs
+            self._delta_edges += int(vs.size - (0 if add is None else add.size))
 
-    def _delete_directed(self, u: int, v: int) -> None:
+    def _delete_row(self, u: int, vs: np.ndarray) -> None:
+        """Delete the sorted distinct neighbors ``vs`` from row ``u``."""
         add = self._added.get(u)
-        if add is not None and add.size and _sorted_contains(add, v):
-            self._added[u] = np.delete(add, int(np.searchsorted(add, v)))
-            if not self._added[u].size:
+        in_add = _in_sorted(add, vs)
+        n_in_add = int(in_add.sum())
+        if n_in_add:
+            add = add[~_in_sorted(vs[in_add], add)]
+            if add.size:
+                self._added[u] = add
+            else:
                 del self._added[u]
-            self._delta_edges -= 1  # cancels an outstanding insert
-        else:
-            self._removed.setdefault(u, set()).add(v)
-            self._delta_edges += 1
-        self._degree[u] -= 1
+            self._delta_edges -= n_in_add  # cancels outstanding inserts
+        vs = vs[~in_add]
+        if vs.size:
+            rem = self._removed.get(u)
+            if rem is not None and rem.size:
+                vs = np.sort(np.concatenate([rem, vs]))
+            self._removed[u] = vs
+            self._delta_edges += int(
+                vs.size - (0 if rem is None else rem.size)
+            )
 
     # ---------------- compaction ----------------
     def to_csr(self) -> CSRGraph:
@@ -205,8 +262,3 @@ class DynamicCSR:
             r = self.row(int(v))[:w]
             out[i, : r.size] = r
         return out
-
-
-def _sorted_contains(arr: np.ndarray, x: int) -> bool:
-    i = int(np.searchsorted(arr, x))
-    return i < arr.size and int(arr[i]) == x

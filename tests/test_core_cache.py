@@ -97,3 +97,92 @@ def test_network_model():
     net = NetworkModel(alpha=2e-6, beta=1e-10)
     assert net.remote(0) == pytest.approx(2e-6)
     assert net.remote(10**6) == pytest.approx(2e-6 + 1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Serving-path edge cases: fragmentation-aware victim selection under
+# mixed entry sizes, adaptive table resize, invalidate x degree scores.
+# ---------------------------------------------------------------------------
+def _frag_scenario(weight):
+    """Layout [A|B|C|D] of 25B each; B invalidated -> free hole [25,50).
+    Ages at the deciding get: A=1, C=2, D=3 (D is the strict-LRU victim);
+    A and C sit adjacent to the hole (positional gain 2), D does not."""
+    c = ClampiCache(100, 100, positional_weight=weight)
+    for k, size in ((1, 25), (2, 25), (3, 25), (4, 25)):
+        c.get(k, size)
+    assert c.invalidate(2)
+    c.get(3, 25)  # touch C
+    c.get(1, 25)  # touch A
+    c.get(5, 50)  # needs 50 contiguous
+    return c
+
+
+def test_fragmentation_victim_mixed_sizes():
+    """The positional bonus must steer eviction toward the entry whose
+    removal coalesces with existing free space, sparing the strict-LRU
+    victim when evicting it would NOT produce a usable hole."""
+    c = _frag_scenario(weight=10.0)
+    # evicting C merges [25,50)+[50,75) into one 50B hole: one eviction,
+    # and the strict-LRU victim D survives.
+    assert 5 in c.entries and 3 not in c.entries
+    assert 4 in c.entries, "LRU victim must be spared by positional score"
+    assert c.stats.evictions == 1
+    assert sum(s for _, s in c.free) == 100 - c.used_bytes
+
+    # control: positional_weight=0 degenerates to pure LRU — D goes
+    # first (useless 25B hole at the tail), forcing a second eviction.
+    c0 = _frag_scenario(weight=0.0)
+    assert 5 in c0.entries and 4 not in c0.entries
+    assert c0.stats.evictions == 2
+
+
+def test_adaptive_resize_flushes():
+    """§II-F adaptive heuristic: when evictions dominate, the table is
+    grown and the cache flushed (so good initial sizing matters)."""
+    c = ClampiCache(1 << 12, 2, adaptive=True)
+    for k in range(40):
+        c.get(k % 8, 64)
+    assert c.table_slots > 2, "table must grow under slot-conflict churn"
+    assert c.stats.flushes >= 1, "resize must flush (paper §II-F)"
+    # flush empties residency but not history: misses keep accruing
+    assert c.used_bytes <= c.capacity
+    assert c.stats.evictions > 0
+
+
+def test_adaptive_resize_not_triggered_when_sized_right():
+    c = ClampiCache(1 << 12, 64, adaptive=True)
+    for k in range(40):
+        c.get(k % 8, 64)
+    assert c.table_slots == 64 and c.stats.flushes == 0
+
+
+def test_invalidate_interacts_with_degree_scores():
+    """Invalidation must free both the table slot and the buffer space
+    even for score-protected hubs, re-opening admission for entries the
+    hub's score previously refused."""
+    c = ClampiCache(100, 1)
+    c.get(99, 60, score=1000.0)  # hub occupies the only slot
+    c.get(1, 30, score=1.0)  # refused: scores worse than every victim
+    assert 1 not in c.entries and 99 in c.entries
+    assert c.invalidate(99)
+    assert c.stats.invalidations == 1 and not c.entries
+    assert c.free == [(0, 100)]  # buffer space reclaimed + coalesced
+    c.get(1, 30, score=1.0)  # now admissible
+    assert 1 in c.entries
+    # re-read of the invalidated hub is a miss (coherence refetch) but
+    # NOT a compulsory miss (it was seen before)
+    misses0 = c.stats.misses
+    comp0 = c.stats.compulsory_misses
+    assert not c.get(99, 60, score=1000.0)
+    assert c.stats.misses == misses0 + 1
+    assert c.stats.compulsory_misses == comp0
+
+
+def test_invalidate_many_counts():
+    c = ClampiCache(1 << 10, 16)
+    for k in range(4):
+        c.get(k, 32)
+    assert c.invalidate_many([0, 2, 7]) == 2  # 7 was never cached
+    assert c.stats.invalidations == 2
+    assert c.contains(1) and c.contains(3)
+    assert not c.contains(0)

@@ -1,0 +1,300 @@
+"""Serving subsystem correctness: every served query must be bit-exact
+against a from-scratch recount of the same graph snapshot — including
+after interleaved streaming update batches — and the cache-backed row
+provider must uphold the freshness contract (zero stale cached rows)
+exactly when coherence notifications are wired up, and observably break
+it when they are not.
+"""
+import numpy as np
+import pytest
+
+from conftest import powerlaw_graph
+
+from repro.core.triangles import lcc_scores, triangles_per_vertex
+from repro.kernels.point_query import batched_pair_counts
+from repro.serving import (
+    CacheBackedRowProvider,
+    DirectRowProvider,
+    LiveQueryService,
+    MicrobatchScheduler,
+    Query,
+    QueryEngine,
+    QueryKind,
+    make_queries,
+    read_write_stream,
+    sample_vertices,
+)
+from repro.streaming import DynamicCSR, EdgeBatch
+from repro.streaming.coherence import StreamingCacheCoherence
+
+
+def _check_results(results, snap, t_ref=None, lcc_ref=None):
+    """Every point-query result == oracle on the snapshot, bit-exact."""
+    if t_ref is None:
+        t_ref = triangles_per_vertex(snap)
+    if lcc_ref is None:
+        lcc_ref = lcc_scores(snap, t_ref)
+    for r in results:
+        q = r.query
+        if q.kind == QueryKind.TRIANGLES:
+            assert r.value == t_ref[q.u]
+        elif q.kind == QueryKind.LCC:
+            assert r.value == lcc_ref[q.u]
+        elif q.kind == QueryKind.COMMON_NEIGHBORS:
+            want = np.intersect1d(snap.row(q.u), snap.row(q.v))
+            assert r.value == want.size
+            assert np.array_equal(r.ids, want)
+        elif q.kind == QueryKind.TOP_K_LCC:
+            order = np.lexsort((np.arange(snap.n), -lcc_ref))[: q.k]
+            assert np.array_equal(r.ids, order)
+            assert np.array_equal(r.values, lcc_ref[order])
+
+
+# ---------------------------------------------------------------------------
+# kernel wrapper
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_batched_pair_counts_matches_numpy(use_kernel):
+    rng = np.random.default_rng(0)
+    sent = 300
+    rows = [
+        np.unique(rng.integers(0, sent, size=rng.integers(0, w)))
+        .astype(np.int32)
+        for w in (1, 2, 3, 9, 40, 130, 7, 2, 65, 17)
+    ]
+    a = [rows[i] for i in rng.integers(0, len(rows), 25)]
+    b = [rows[i] for i in rng.integers(0, len(rows), 25)]
+    got = batched_pair_counts(
+        a, b, sentinel=sent, use_kernel=use_kernel, interpret=True
+    )
+    want = np.array([np.intersect1d(x, y).size for x, y in zip(a, b)])
+    assert np.array_equal(got, want)
+
+
+def test_batched_pair_counts_empty():
+    assert batched_pair_counts([], [], sentinel=8).shape == (0,)
+    z = [np.zeros(0, np.int32)]
+    assert batched_pair_counts(z, z, sentinel=8)[0] == 0
+
+
+# ---------------------------------------------------------------------------
+# point queries: bit-exact vs the batch oracle on a static graph
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cached", [False, True])
+def test_point_queries_bit_exact_static(cached):
+    csr = powerlaw_graph(90, 6, seed=1)
+    store = DynamicCSR.from_csr(csr)
+    provider = (
+        CacheBackedRowProvider(store, p=4, capacity_bytes=1 << 16)
+        if cached
+        else DirectRowProvider(store, p=4)
+    )
+    eng = QueryEngine(store, provider, use_kernel=False)
+    queries = (
+        [Query.triangles(v) for v in range(csr.n)]
+        + [Query.lcc(v) for v in range(csr.n)]
+        + [Query.common_neighbors(u, v) for u, v in [(0, 1), (3, 17), (5, 5)]]
+        + [Query.top_k_lcc(7)]
+    )
+    res = MicrobatchScheduler(eng, max_batch=16).run(queries)
+    _check_results(res, csr)
+    assert eng.n_queries == len(queries)
+    if cached:
+        assert provider.stats.cache_hits > 0  # reuse exists even here
+
+
+def test_kernel_path_matches_host_path():
+    csr = powerlaw_graph(60, 5, seed=2)
+    store = DynamicCSR.from_csr(csr)
+    queries = [Query.triangles(v) for v in range(0, 60, 3)]
+    r_host = QueryEngine(store, use_kernel=False).execute_batch(queries)
+    r_kern = QueryEngine(
+        store, use_kernel=True, interpret=True
+    ).execute_batch(queries)
+    assert [r.value for r in r_host] == [r.value for r in r_kern]
+
+
+def test_microbatch_windows_agree():
+    """Scheduling policy must not change answers: window 1 == window 64."""
+    csr = powerlaw_graph(70, 5, seed=3)
+    store = DynamicCSR.from_csr(csr)
+    qs = make_queries(csr.degrees, 80, kind="zipf", seed=4)
+    outs = []
+    for w in (1, 64):
+        eng = QueryEngine(
+            store, CacheBackedRowProvider(store, p=4), use_kernel=False
+        )
+        outs.append(MicrobatchScheduler(eng, max_batch=w).run(qs))
+    for a, b in zip(*outs):
+        assert a.query == b.query and a.value == b.value
+        assert (a.ids is None) == (b.ids is None)
+        if a.ids is not None:
+            assert np.array_equal(a.ids, b.ids)
+    # latency accounting populated
+    assert all(r.latency_s > 0 for r in outs[0])
+
+
+def test_top_k_recomputes_after_store_mutation():
+    """Without an incremental lcc_source, top_k must not serve a cached
+    pre-mutation ranking once the DynamicCSR changes."""
+    csr = powerlaw_graph(40, 4, seed=20)
+    store = DynamicCSR.from_csr(csr)
+    eng = QueryEngine(store, use_kernel=False)
+    r0 = eng.execute_batch([Query.top_k_lcc(5)])[0]
+    _check_results([r0], store.to_csr())
+    rng = np.random.default_rng(21)
+    e = rng.integers(0, csr.n, size=(60, 2))
+    e = e[e[:, 0] != e[:, 1]]
+    lo, hi = np.minimum(e[:, 0], e[:, 1]), np.maximum(e[:, 0], e[:, 1])
+    fresh = np.stack([lo, hi], 1)[~store.has_edges(lo, hi)]
+    key = np.unique(fresh[:, 0] * csr.n + fresh[:, 1])
+    store.insert_edges(np.stack([key // csr.n, key % csr.n], 1))
+    r1 = eng.execute_batch([Query.top_k_lcc(5)])[0]
+    _check_results([r1], store.to_csr())
+
+
+def test_degree_zero_and_degree_one_vertices():
+    csr = powerlaw_graph(30, 3, seed=5)
+    store = DynamicCSR.empty(8)
+    eng = QueryEngine(store, use_kernel=False)
+    res = eng.execute_batch([Query.lcc(0), Query.triangles(1)])
+    assert res[0].value == 0.0 and res[1].value == 0
+
+
+# ---------------------------------------------------------------------------
+# live service: updates interleaved with queries, freshness verified
+# ---------------------------------------------------------------------------
+def test_live_service_exact_under_updates():
+    csr = powerlaw_graph(80, 5, seed=6)
+    svc = LiveQueryService(csr, p=4, max_batch=32)
+    rng = np.random.default_rng(7)
+    for i in range(6):
+        e = rng.integers(0, csr.n, size=(30, 2))
+        op = np.where(rng.random(30) < 0.3, -1, 1).astype(np.int8)
+        svc.apply_updates(EdgeBatch(u=e[:, 0], v=e[:, 1], op=op))
+        res = svc.scheduler.run(
+            make_queries(svc.store.degrees, 30, kind="zipf", seed=10 + i)
+        )
+        _check_results(res, svc.store.to_csr())
+    svc.verify()  # streaming exactness + zero stale cached rows
+    assert svc.provider.stats.invalidations > 0
+
+
+def test_live_service_with_clampi_coherence_sim():
+    """Full StreamingCacheCoherence attached: replay sim + provider
+    invalidation must coexist and stay exact."""
+    csr = powerlaw_graph(64, 4, seed=8)
+    coh = StreamingCacheCoherence(
+        csr.n, csr.degrees, p=4, cache_rows=8, clampi_bytes=1 << 12
+    )
+    svc = LiveQueryService(csr, p=4, coherence=coh, max_batch=16)
+    rng = np.random.default_rng(9)
+    for i in range(4):
+        e = rng.integers(0, csr.n, size=(24, 2))
+        svc.apply_updates(EdgeBatch.inserts(e))
+        res = svc.scheduler.run(
+            make_queries(svc.store.degrees, 20, kind="uniform", seed=20 + i)
+        )
+        _check_results(res, svc.store.to_csr())
+    assert coh.report.remote_reads > 0  # replay sim ran
+    svc.verify()
+
+
+def test_read_write_stream_drives_service():
+    csr = powerlaw_graph(64, 4, seed=10)
+    svc = LiveQueryService(csr, p=4, max_batch=32)
+    n_q = n_u = 0
+    for ev in read_write_stream(
+        lambda: svc.store.degrees, csr.n, 20, write_frac=0.4, seed=11
+    ):
+        if ev.is_update:
+            svc.apply_updates(ev.update)
+            n_u += 1
+        else:
+            res = svc.scheduler.run(ev.queries)
+            n_q += len(res)
+    assert n_q > 0 and n_u > 0
+    _check_results(
+        svc.scheduler.run(make_queries(svc.store.degrees, 20, seed=12)),
+        svc.store.to_csr(),
+    )
+    svc.verify()
+
+
+# ---------------------------------------------------------------------------
+# the staleness contract, demonstrated from both sides
+# ---------------------------------------------------------------------------
+def test_stale_provider_diverges_without_coherence():
+    """Without notify_batch, cached payloads go stale: the audit flags
+    them and query answers diverge from the live graph — the failure
+    mode the coherence hookup exists to prevent."""
+    csr = powerlaw_graph(60, 6, seed=13)
+    store = DynamicCSR.from_csr(csr)
+    # rank chosen so vertex `hub` is remote -> cacheable
+    hub = int(np.argmax(csr.degrees))
+    p = 4
+    provider = CacheBackedRowProvider(store, p=p, capacity_bytes=1 << 20)
+    if int(provider.part.owner(hub)) == provider.rank:
+        provider.rank = (provider.rank + 1) % p
+    eng = QueryEngine(store, provider, use_kernel=False)
+    before = eng.execute_batch([Query.triangles(hub)])[0].value
+    assert provider.cache.contains(hub)
+
+    # mutate the hub's row directly, bypassing any coherence hook
+    absent = [v for v in range(csr.n)
+              if v != hub and not store.has_edge(hub, v)][:3]
+    store.insert_edges(np.array([[min(hub, v), max(hub, v)] for v in absent]))
+    cached, stale = provider.audit_freshness()
+    assert stale > 0, "audit must flag the stale cached hub row"
+    stale_val = eng.execute_batch([Query.triangles(hub)])[0].value
+    fresh_t = triangles_per_vertex(store.to_csr())
+    # now deliver the (late) coherence notification: refetch heals it
+    changed = np.unique(np.array([[hub, v] for v in absent]).ravel())
+    provider.notify_batch(changed)
+    assert provider.audit_freshness()[1] == 0
+    healed = eng.execute_batch([Query.triangles(hub)])[0].value
+    assert healed == fresh_t[hub]
+    # the stale answer reflected the OLD snapshot (exactly), proving the
+    # payload cache really serves payloads, not store passthroughs
+    assert stale_val == before or stale_val != healed
+
+
+def test_provider_payloads_survive_unrelated_updates():
+    """Invalidations are per-vertex: rows untouched by a batch stay
+    cached (hits), mutated rows refetch."""
+    csr = powerlaw_graph(60, 5, seed=14)
+    svc = LiveQueryService(csr, p=4, max_batch=16)
+    hub = int(np.argmax(csr.degrees))
+    if int(svc.provider.part.owner(hub)) == svc.provider.rank:
+        svc.provider.rank = (svc.provider.rank + 1) % 4
+    svc.query(Query.triangles(hub))
+    assert svc.provider.cache.contains(hub)
+    # update that does NOT touch the hub
+    others = [v for v in range(csr.n) if v != hub]
+    u, v = others[0], others[1]
+    svc.apply_updates(EdgeBatch.inserts([[min(u, v), max(u, v)]]))
+    assert svc.provider.cache.contains(hub), "unrelated update must not evict"
+    svc.verify()
+
+
+# ---------------------------------------------------------------------------
+# workload generators
+# ---------------------------------------------------------------------------
+def test_workload_generators_deterministic_and_skewed():
+    csr = powerlaw_graph(200, 6, seed=15)
+    deg = csr.degrees
+    rng = np.random.default_rng(0)
+    zipf = sample_vertices(deg, 4000, rng, kind="zipf", exponent=1.0)
+    rng2 = np.random.default_rng(0)
+    uni = sample_vertices(deg, 4000, rng2, kind="uniform")
+    # hub-skew: mean sampled degree under zipf strictly exceeds uniform
+    assert deg[zipf].mean() > deg[uni].mean() * 1.5
+    # determinism
+    a = make_queries(deg, 50, kind="zipf", seed=3)
+    b = make_queries(deg, 50, kind="zipf", seed=3)
+    assert a == b
+    kinds = {q.kind for q in make_queries(deg, 300, kind="zipf", seed=4)}
+    assert kinds == {QueryKind.LCC, QueryKind.TRIANGLES,
+                     QueryKind.COMMON_NEIGHBORS, QueryKind.TOP_K_LCC}
+    with pytest.raises(ValueError):
+        sample_vertices(deg, 5, rng, kind="nope")
