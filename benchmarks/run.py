@@ -27,6 +27,7 @@ def main(argv=None):
         bench_intersection,
         bench_reuse,
         bench_roofline,
+        bench_schedule_rebuild,
         bench_scores,
         bench_serving,
         bench_shared_scaling,
@@ -43,6 +44,7 @@ def main(argv=None):
         "strong_scaling_fig9_10": lambda: bench_strong_scaling.run(quick),
         "streaming_updates": lambda: bench_streaming.run(quick),
         "serving_queries": lambda: bench_serving.run(quick),
+        "schedule_rebuild": lambda: bench_schedule_rebuild.run(quick),
         "roofline": lambda: bench_roofline.run(),
     }
     if args.only:
@@ -123,6 +125,14 @@ def checklist(results):
             f"streaming: vectorized DynamicCSR mutations "
             f"{fs['store_vectorized_speedup']}x vs per-edge np.insert",
             fs["store_vectorized_speedup"] > 1.0,
+        ))
+    sr = results.get("schedule_rebuild", {})
+    if "schedule_incremental_speedup" in sr:
+        checks.append((
+            f"schedule: incremental apply_delta "
+            f"{sr['schedule_incremental_speedup']}x faster than "
+            f"from-scratch rebuild at 1% deltas (target >= 5x, bit-exact)",
+            sr["schedule_incremental_speedup"] >= 5.0 and sr["bit_exact"],
         ))
     sv = results.get("serving_queries", {})
     if "microbatch_speedup_zipf" in sv:

@@ -33,6 +33,7 @@ import numpy as np
 __all__ = [
     "NetworkModel",
     "CacheStats",
+    "merge_cache_stats",
     "ClampiCache",
     "StaticDegreeCache",
     "build_static_degree_cache",
@@ -78,6 +79,22 @@ class CacheStats:
     @property
     def miss_rate(self) -> float:
         return 1.0 - self.hit_rate if self.gets else 0.0
+
+
+def merge_counter_dataclasses(cls, items):
+    """Field-wise sum over flat numeric-counter dataclasses (per-rank
+    statistics aggregation). Enumerates ``dataclasses.fields`` so a new
+    counter can never be silently dropped from an aggregate."""
+    out = cls()
+    for s in items:
+        for f in dataclasses.fields(cls):
+            setattr(out, f.name, getattr(out, f.name) + getattr(s, f.name))
+    return out
+
+
+def merge_cache_stats(stats: List["CacheStats"]) -> CacheStats:
+    """Aggregated view over per-rank cache statistics."""
+    return merge_counter_dataclasses(CacheStats, stats)
 
 
 @dataclasses.dataclass

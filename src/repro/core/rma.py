@@ -31,13 +31,22 @@ from .partition import Partition1D, partition_1d
 
 __all__ = [
     "ShardedLCCProblem",
+    "ScheduleWidthOverflow",
     "build_sharded_problem",
+    "assert_problems_equal",
     "RMATraceStats",
     "simulate_rma_lcc",
 ]
 
 OFFSET_ENTRY_BYTES = 8  # (start, end) pair of int32 — paper §IV-D2
 ID_BYTES = 4
+
+
+class ScheduleWidthOverflow(ValueError):
+    """A touched vertex's degree outgrew the problem's padded row width;
+    the incremental patch cannot represent its row. Callers rebuild from
+    scratch with a larger width (``ShardedRuntime.maintain_schedule``
+    does so automatically, doubling the width for headroom)."""
 
 
 @dataclasses.dataclass
@@ -67,6 +76,14 @@ class ShardedLCCProblem:
     n_rounds: int
     s_max: int
     cache_ids: np.ndarray  # [C] global ids
+    # host-side schedule-maintenance state (not shipped to devices):
+    # the build parameters before clamping, and the per-rank edge
+    # worklists (u_local, v_global) the schedule was compiled from.
+    n_rounds_requested: int = 4
+    dedup_rounds: bool = True
+    works: Optional[List[Tuple[np.ndarray, np.ndarray]]] = dataclasses.field(
+        default=None, repr=False
+    )
 
     @property
     def sentinel(self) -> int:
@@ -78,6 +95,172 @@ class ShardedLCCProblem:
         valid = self.serve_idx < self.n_loc
         per = valid.sum(axis=-1) * self.width * ID_BYTES  # [p(send), NR, p(dst)]
         return per.transpose(2, 1, 0).sum(axis=-1)  # [p(dst), NR]
+
+    # ------------------------------------------------------------------
+    # Incremental schedule maintenance.
+    # ------------------------------------------------------------------
+    def apply_delta(self, ins: np.ndarray, dele: np.ndarray) -> "ShardedLCCProblem":
+        """Patch the compiled problem for one applied update batch.
+
+        ``ins``/``dele`` are canonical ``[K, 2]`` edge arrays with the
+        streaming contract: every insert absent from, and every delete
+        present in, the graph the problem currently describes (exactly
+        what ``normalize_batch`` emits). The patch
+
+        1. rewrites the padded rows + degrees of the touched vertices
+           (and their replicated cache-row copies) — O(delta) rows,
+        2. splices the touched edges in/out of each rank's worklist —
+           one vectorized merge per rank, and
+        3. recompiles the pull schedule (round request lists, serve
+           lists, combined indices) from the patched worklists with the
+           vectorized compiler — bit-exact vs the per-edge reference in
+           ``build_sharded_problem``.
+
+        Raises ``ScheduleWidthOverflow`` (leaving the problem untouched)
+        when a touched vertex outgrows the padded width; callers rebuild
+        with a larger width. Mutates and returns ``self``.
+        """
+        ins = np.asarray(ins, np.int64).reshape(-1, 2)
+        dele = np.asarray(dele, np.int64).reshape(-1, 2)
+        if ins.shape[0] == 0 and dele.shape[0] == 0:
+            return self
+        if self.works is None:
+            raise ValueError(
+                "problem carries no host worklists; rebuild it with "
+                "build_sharded_problem before applying deltas"
+            )
+        part = partition_1d(self.n, self.p)
+        sent = self.sentinel
+        w = self.width
+
+        # per-vertex delta neighbor lists (both directions of each edge)
+        add_of: Dict[int, List[int]] = {}
+        del_of: Dict[int, List[int]] = {}
+        for a, b in ins:
+            add_of.setdefault(int(a), []).append(int(b))
+            add_of.setdefault(int(b), []).append(int(a))
+        for a, b in dele:
+            del_of.setdefault(int(a), []).append(int(b))
+            del_of.setdefault(int(b), []).append(int(a))
+        touched = sorted(set(add_of) | set(del_of))
+
+        # validate EVERYTHING up front (width fit + splice consistency)
+        # so any failure leaves the problem bit-identical — a failed
+        # apply_delta must be safely retryable/rebuildable.
+        for v in touched:
+            k = int(part.owner(v))
+            lu = v - part.lo(k)
+            d_old = int(self.degrees[k, lu])
+            d_new = d_old + len(add_of.get(v, ())) - len(del_of.get(v, ()))
+            if d_old > w or d_new > w:
+                raise ScheduleWidthOverflow(
+                    f"vertex {v}: degree {max(d_old, d_new)} exceeds the "
+                    f"padded row width {w}"
+                )
+        span = np.int64(self.n + 1)
+        src_i = np.concatenate([ins[:, 0], ins[:, 1]])
+        dst_i = np.concatenate([ins[:, 1], ins[:, 0]])
+        src_d = np.concatenate([dele[:, 0], dele[:, 1]])
+        dst_d = np.concatenate([dele[:, 1], dele[:, 0]])
+        own_i = part.owner(src_i)
+        own_d = part.owner(src_d)
+        splices = []  # per rank: (del_positions, ins_locals, ins_globals)
+        for k in range(self.p):
+            u_l, v_g = self.works[k]
+            # keys are strictly increasing: u ascending, v ascending
+            # within u, (u, v) unique
+            key = u_l.astype(np.int64) * span + v_g.astype(np.int64)
+            mk = own_d == k
+            dpos = np.zeros(0, np.int64)
+            if mk.any():
+                dkeys = np.sort((src_d[mk] - part.lo(k)) * span + dst_d[mk])
+                dpos = np.searchsorted(key, dkeys)
+                if dpos.size and (
+                    dpos.max() >= key.size
+                    or not np.array_equal(key[dpos], dkeys)
+                ):
+                    raise ValueError(
+                        "delete of an edge absent from the schedule"
+                    )
+            mk = own_i == k
+            s_loc = np.zeros(0, np.int64)
+            d_glb = np.zeros(0, np.int64)
+            if mk.any():
+                s_loc = src_i[mk] - part.lo(k)
+                d_glb = dst_i[mk]
+                order = np.argsort(s_loc * span + d_glb, kind="stable")
+                s_loc, d_glb = s_loc[order], d_glb[order]
+                ikeys = s_loc * span + d_glb
+                # the streaming contract makes ins/dele disjoint, so
+                # presence in the PRE-delete keys is a contract breach
+                pos = np.searchsorted(key, ikeys)
+                probe = (
+                    key[np.minimum(pos, max(key.size - 1, 0))]
+                    if key.size
+                    else ikeys + 1
+                )
+                if np.any((pos < key.size) & (probe == ikeys)):
+                    raise ValueError(
+                        "insert of an edge already in the schedule"
+                    )
+            splices.append((dpos, s_loc, d_glb))
+
+        # 1. patch padded rows, degrees, and replicated cache rows
+        for v in touched:
+            k = int(part.owner(v))
+            lu = v - part.lo(k)
+            d_old = int(self.degrees[k, lu])
+            row = self.rows_ext[k, lu, :d_old].astype(np.int64)
+            dels = np.asarray(del_of.get(v, ()), np.int64)
+            adds = np.asarray(add_of.get(v, ()), np.int64)
+            if dels.size:
+                row = row[~np.isin(row, dels)]
+            if adds.size:
+                row = np.sort(np.concatenate([row, adds]))
+            self.rows_ext[k, lu, :] = sent
+            self.rows_ext[k, lu, : row.size] = row.astype(np.int32)
+            self.degrees[k, lu] = row.size
+            if self.cache_ids.size:
+                ci = int(np.searchsorted(self.cache_ids, v))
+                if ci < self.cache_ids.size and self.cache_ids[ci] == v:
+                    self.cache_rows[ci, :] = sent
+                    self.cache_rows[ci, : row.size] = row.astype(np.int32)
+
+        # 2. splice the touched edges in/out of each rank's worklist
+        #    (pre-validated above, so this cannot fail midway)
+        for k in range(self.p):
+            u_l, v_g = self.works[k]
+            dpos, s_loc, d_glb = splices[k]
+            if dpos.size:
+                keep = np.ones(u_l.size, bool)
+                keep[dpos] = False
+                u_l, v_g = u_l[keep], v_g[keep]
+            if s_loc.size:
+                key = u_l.astype(np.int64) * span + v_g.astype(np.int64)
+                pos = np.searchsorted(key, s_loc * span + d_glb)
+                u_l = np.insert(u_l, pos, s_loc.astype(u_l.dtype))
+                v_g = np.insert(v_g, pos, d_glb.astype(v_g.dtype))
+            self.works[k] = (u_l, v_g)
+
+        # 3. recompile the schedule from the patched worklists
+        (
+            self.edge_u,
+            self.edge_vc,
+            self.edge_mask,
+            self.serve_idx,
+            self.e_max,
+            self.n_rounds,
+            self.s_max,
+        ) = _compile_schedule(
+            self.works,
+            part,
+            n=self.n,
+            n_loc=self.n_loc,
+            cache_ids=self.cache_ids,
+            n_rounds_req=self.n_rounds_requested,
+            dedup_rounds=self.dedup_rounds,
+        )
+        return self
 
 
 def _edge_worklist(
@@ -102,6 +285,7 @@ def build_sharded_problem(
     dedup_rounds: bool = True,
 ) -> ShardedLCCProblem:
     """Compile the static pull schedule for a p-way 1D partition."""
+    n_rounds_requested = n_rounds
     part = partition_1d(csr.n, p)
     n_loc = part.block
     w = int(width if width is not None else max(csr.max_degree, 1))
@@ -232,7 +416,153 @@ def build_sharded_problem(
         n_rounds=n_rounds,
         s_max=s_max,
         cache_ids=cache_ids,
+        n_rounds_requested=n_rounds_requested,
+        dedup_rounds=dedup_rounds,
+        works=works,
     )
+
+
+# --------------------------------------------------------------------------
+# Vectorized schedule compiler (the apply_delta recompile path).
+# --------------------------------------------------------------------------
+def _cumcount(groups: np.ndarray) -> np.ndarray:
+    """Per-element index among prior occurrences of the same value, in
+    the given order (vectorized group cumcount)."""
+    if groups.size == 0:
+        return np.zeros(0, np.int64)
+    order = np.argsort(groups, kind="stable")
+    gs = groups[order]
+    starts = np.flatnonzero(np.r_[True, gs[1:] != gs[:-1]])
+    lens = np.diff(np.r_[starts, gs.size])
+    out = np.empty(gs.size, np.int64)
+    out[order] = np.arange(gs.size) - np.repeat(starts, lens)
+    return out
+
+
+def _compile_schedule(
+    works: List[Tuple[np.ndarray, np.ndarray]],
+    part: Partition1D,
+    *,
+    n: int,
+    n_loc: int,
+    cache_ids: np.ndarray,
+    n_rounds_req: int,
+    dedup_rounds: bool,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, int, int, int]:
+    """Vectorized re-derivation of the pull schedule from edge worklists.
+
+    Bit-exact vs the per-edge reference loops in ``build_sharded_problem``
+    (the property tests assert every array): same round chunking, same
+    order-of-first-use request dedup per (initiator, round), same serve
+    lists and combined indices. One pass of numpy group ops per
+    (rank, round) instead of one Python iteration per edge — this is
+    what makes per-batch schedule maintenance cheap.
+
+    Returns ``(edge_u, edge_vc, edge_mask, serve_idx, e_max, n_rounds,
+    s_max)``.
+    """
+    p = part.p
+    c = int(cache_ids.shape[0])
+    slot_lookup = StaticDegreeCache(vertex_ids=cache_ids) if c else None
+    e_max = max((u.size for u, _ in works), default=1) or 1
+    n_rounds = max(1, min(n_rounds_req, e_max))
+    e_chunk = -(-e_max // n_rounds)
+    e_max = e_chunk * n_rounds
+    base_cache = n_loc + 1
+    span = np.int64(n_loc + 1)  # q * span + v_local keys are collision-free
+
+    edge_u = np.full((p, e_max), n_loc, np.int32)
+    edge_vc64 = np.full((p, e_max), n_loc, np.int64)
+    edge_mask = np.zeros((p, e_max), bool)
+    fetch_edges = []  # (rank, edge_idx, q, pos) awaiting s_max resolution
+    serve_entries = []  # (rank, round, q, pos, v_local)
+    s_max = 1
+    for k in range(p):
+        u_l, v_g = works[k]
+        ne = int(v_g.size)
+        if ne == 0:
+            continue
+        edge_u[k, :ne] = u_l
+        edge_mask[k, :ne] = True
+        v64 = v_g.astype(np.int64)
+        owners = part.owner(v64).astype(np.int64)
+        loc = owners == k
+        slots = (
+            slot_lookup.slot_of(v64)
+            if slot_lookup is not None
+            else np.full(ne, -1, np.int32)
+        )
+        cch = (~loc) & (slots >= 0)
+        ftc = (~loc) & (slots < 0)
+        vc = edge_vc64[k]
+        idx_all = np.arange(ne)
+        vc[idx_all[loc]] = v64[loc] - part.lo(k)
+        vc[idx_all[cch]] = base_cache + slots[cch]
+        r_of = idx_all // e_chunk
+        for r in range(n_rounds):
+            idx = np.flatnonzero(ftc & (r_of == r))
+            if idx.size == 0:
+                continue
+            q = owners[idx]
+            v_local = v64[idx] - np.minimum(q * part.block, n)
+            keys = q * span + v_local
+            if dedup_rounds:
+                uniq, first, inv = np.unique(
+                    keys, return_index=True, return_inverse=True
+                )
+                order = np.argsort(first, kind="stable")  # first-use order
+                q_u = uniq[order] // span
+                v_u = uniq[order] % span
+                pos_u = _cumcount(q_u)  # index within q's request list
+                rank_of = np.empty(uniq.size, np.int64)
+                rank_of[order] = np.arange(uniq.size)
+                pos_e = pos_u[rank_of[inv]]
+                serve_entries.append((k, r, q_u, pos_u, v_u))
+                counts = np.bincount(q_u, minlength=p)
+            else:
+                pos_e = _cumcount(q)  # every occurrence appends
+                serve_entries.append((k, r, q, pos_e, v_local))
+                counts = np.bincount(q, minlength=p)
+            s_max = max(s_max, int(counts.max()))
+            fetch_edges.append((k, idx, q, pos_e))
+
+    serve_idx = np.full((p, n_rounds, p, s_max), n_loc, np.int32)
+    for k, r, q_u, pos_u, v_u in serve_entries:
+        serve_idx[q_u, r, k, pos_u] = v_u.astype(np.int32)
+    base_fetch = n_loc + 1 + c
+    for k, idx, q, pos_e in fetch_edges:
+        edge_vc64[k][idx] = base_fetch + q * s_max + pos_e
+    return (
+        edge_u,
+        edge_vc64.astype(np.int32),
+        edge_mask,
+        serve_idx,
+        int(e_max),
+        int(n_rounds),
+        int(s_max),
+    )
+
+
+def assert_problems_equal(
+    got: ShardedLCCProblem, want: ShardedLCCProblem
+) -> None:
+    """Field-wise bit-exact comparison of two compiled problems (the
+    incremental-maintenance acceptance check)."""
+    for f in ("n", "p", "width", "n_loc", "e_max", "n_rounds", "s_max"):
+        g, w = getattr(got, f), getattr(want, f)
+        assert g == w, f"{f}: {g} != {w}"
+    for f in (
+        "rows_ext",
+        "degrees",
+        "edge_u",
+        "edge_vc",
+        "edge_mask",
+        "serve_idx",
+        "cache_rows",
+        "cache_ids",
+    ):
+        g, w = getattr(got, f), getattr(want, f)
+        assert np.array_equal(g, w), f"{f} diverged"
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,375 @@
+"""Sharded RMA runtime: the shared partition/cache/transport substrate.
+
+The paper's central claim is that ONE asynchronous RMA+caching layer
+(1D partition, CLaMPI-style caches, degree-scored victim selection)
+serves every consumer — the epoch sweep, streaming maintenance, and
+point-query serving. This module is that layer, extracted so the three
+consumers stop re-implementing single-rank views of it:
+
+- **Ownership** — a ``Partition1D`` answers ``owner(v)`` for every
+  consumer; rank ``k`` owns the contiguous block ``[lo(k), hi(k))``.
+- **Transport** — ``fetch_rows(rank, vertices)`` is the rank-indexed
+  remote-read path: rows owned by ``rank`` are free, remote rows pay the
+  modeled ``NetworkModel`` get and pass through rank ``rank``'s
+  ``ClampiCache`` (degree-scored admission, real payloads). The
+  ``serve_rows`` matrix accumulates the all-to-all serve lists (rows
+  shipped owner -> requester) the static engine compiles ahead of time.
+- **Coherence** — ``invalidate(changed_ids)`` fans each mutated row out
+  ONLY to the ranks whose cache holds it (``contains`` probe, no stats
+  perturbation) instead of broadcasting to all p ranks; the fanout
+  ledger records the saving. This is the correctness contract every
+  payload-carrying cache relies on: a hit returns the payload captured
+  at fetch time, so a mutated row must be dropped everywhere it is
+  resident before the next read.
+- **Schedule** — the runtime can carry the epoch engine's static pull
+  schedule (``ShardedLCCProblem``) and keep it fresh under streaming
+  deltas via ``maintain_schedule`` (incremental ``apply_delta`` with a
+  width-overflow rebuild fallback).
+
+Consumers hold *views*: a serving row provider is (runtime, rank); a
+sharded query engine is p such views; the streaming engine shards its
+delta worklists by ``runtime.part.owner``. None of them construct
+partitions or caches themselves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .cache import (
+    CacheStats,
+    ClampiCache,
+    NetworkModel,
+    StaticDegreeCache,
+    build_static_degree_cache,
+    merge_cache_stats,
+    merge_counter_dataclasses,
+)
+from .partition import Partition1D, partition_1d
+
+__all__ = ["ProviderStats", "ShardedRuntime"]
+
+ID_BYTES = 4
+
+
+@dataclasses.dataclass
+class ProviderStats:
+    """Per-rank read-path accounting (one instance per runtime rank)."""
+
+    local_reads: int = 0
+    remote_reads: int = 0  # reads of non-local rows (pre-cache)
+    cache_hits: int = 0
+    cache_misses: int = 0
+    invalidations: int = 0
+    stale_payloads_dropped: int = 0
+    bytes_fetched: int = 0  # remote bytes actually moved (post-cache)
+    modeled_comm_s: float = 0.0
+
+    @property
+    def hit_rate(self) -> float:
+        r = self.remote_reads
+        return self.cache_hits / r if r else 0.0
+
+
+class ShardedRuntime:
+    """Owns the 1D partition, p per-rank caches, the network model, the
+    rank-indexed row transport, and (optionally) the static pull
+    schedule. See the module docstring for the contracts."""
+
+    def __init__(
+        self,
+        store=None,
+        p: int = 4,
+        *,
+        n: Optional[int] = None,
+        cache_bytes: int = 1 << 20,
+        table_slots: Optional[int] = None,
+        network: Optional[NetworkModel] = None,
+        use_degree_score: bool = True,
+        uncached: bool = False,
+    ):
+        if store is not None:
+            n = int(store.n)
+        assert n is not None, "need a store or an explicit vertex count n"
+        self.store = store
+        self.n = int(n)
+        self.p = int(p)
+        self.part: Partition1D = partition_1d(self.n, self.p)
+        self.net = network or NetworkModel()
+        self.use_degree_score = use_degree_score
+        self.caches: Optional[List[ClampiCache]] = (
+            None
+            if uncached
+            else [
+                ClampiCache(
+                    cache_bytes,
+                    table_slots or max(1, self.n // 4),
+                    mode="always",
+                    network=self.net,
+                )
+                for _ in range(self.p)
+            ]
+        )
+        # payloads mirror each rank's cache residency: row copy at fetch
+        self._payloads: List[Dict[int, np.ndarray]] = [
+            {} for _ in range(self.p)
+        ]
+        self.stats: List[ProviderStats] = [
+            ProviderStats() for _ in range(self.p)
+        ]
+        # all-to-all serve accounting: serve_rows[owner, requester] = rows
+        # actually shipped (post-cache misses), the dynamic analogue of
+        # the static engine's per-round serve lists.
+        self.serve_rows = np.zeros((self.p, self.p), np.int64)
+        # targeted-coherence ledger: fanout messages actually sent vs the
+        # p * |changed| a broadcast scheme would pay.
+        self.invalidations_sent = 0
+        self.invalidations_broadcast_equiv = 0
+        # optional shared static degree cache (epoch/coherence consumers)
+        self.static_cache: Optional[StaticDegreeCache] = None
+        # optional static pull schedule kept fresh under deltas
+        self.problem = None
+        self.schedule_rebuilds = 0
+        self.schedule_deltas = 0
+
+    # ---------------- wiring ----------------
+    def bind_store(self, store) -> None:
+        """Attach (or swap) the authoritative row store. Consumers that
+        create their own store (e.g. the streaming engine) bind it here
+        so every rank's transport reads the same live graph. Swapping an
+        already-bound store flushes every rank's cache: payloads captured
+        from the old store would otherwise be served as hits against the
+        new one."""
+        assert int(store.n) == self.n, "store/partition size mismatch"
+        if store is self.store:
+            return
+        swapped = self.store is not None
+        self.store = store
+        if swapped and self.caches is not None:
+            for k, cache in enumerate(self.caches):
+                if cache.entries:
+                    cache.flush()
+                self._payloads[k].clear()
+
+    def build_static_cache(self, capacity_rows: int) -> StaticDegreeCache:
+        """Install a shared top-C degree-scored resident set."""
+        deg = np.asarray(self.store.degrees)
+        self.static_cache = build_static_degree_cache(deg, capacity_rows)
+        return self.static_cache
+
+    # ---------------- ownership ----------------
+    def owner(self, v):
+        return self.part.owner(v)
+
+    def shard_of(self, vertices: np.ndarray) -> np.ndarray:
+        """Owner rank per vertex — the worklist-sharding helper."""
+        return self.part.owner(np.asarray(vertices, np.int64))
+
+    # ---------------- transport ----------------
+    def fetch_rows(
+        self, rank: int, vertices: Sequence[int]
+    ) -> Dict[int, np.ndarray]:
+        """Sorted adjacency row per distinct vertex, as read by ``rank``.
+
+        Rows owned by ``rank`` bypass the cache (free); remote rows go
+        through rank ``rank``'s ClampiCache admission — a hit returns the
+        payload captured at fetch time, a miss pays the modeled remote
+        get and ships the row from its owner (serve matrix)."""
+        rank = int(rank)
+        st = self.stats[rank]
+        out: Dict[int, np.ndarray] = {}
+        store = self.store
+        if self.caches is None:
+            for v in vertices:
+                v = int(v)
+                row = store.row(v)
+                if int(self.part.owner(v)) == rank:
+                    st.local_reads += 1
+                else:
+                    st.remote_reads += 1
+                    st.cache_misses += 1
+                    size = row.size * ID_BYTES
+                    st.bytes_fetched += size
+                    st.modeled_comm_s += self.net.remote(size)
+                    self.serve_rows[int(self.part.owner(v)), rank] += 1
+                out[v] = row
+            return out
+        cache = self.caches[rank]
+        payloads = self._payloads[rank]
+        deg = store.degrees
+        for v in vertices:
+            v = int(v)
+            if int(self.part.owner(v)) == rank:
+                st.local_reads += 1
+                out[v] = store.row(v)
+                continue
+            st.remote_reads += 1
+            d = int(deg[v])
+            size = d * ID_BYTES
+            score = float(d) if self.use_degree_score else None
+            if cache.get(v, size, score=score):
+                st.cache_hits += 1
+                row = payloads.get(v)
+                if row is None:
+                    # entry admitted without a payload (the coherence
+                    # replay drives the same caches via get() directly);
+                    # nothing invalidation-worthy happened since, so the
+                    # store row IS the row at admission time — capture it
+                    # and restore the payloads-mirror invariant.
+                    row = store.row(v).copy()
+                    payloads[v] = row
+                out[v] = row
+                continue
+            st.cache_misses += 1
+            st.bytes_fetched += size
+            self.serve_rows[int(self.part.owner(v)), rank] += 1
+            row = store.row(v).copy()
+            if cache.contains(v):  # admitted after the miss
+                payloads[v] = row
+            else:
+                payloads.pop(v, None)
+            out[v] = row
+        # single comm ledger: the cache already charges remote reads on
+        # miss plus hit/insert probe costs (paper §IV-D1) — mirror it.
+        st.modeled_comm_s = cache.stats.comm_time
+        return out
+
+    # ---------------- coherence ----------------
+    def invalidate(self, changed_ids: Iterable[int]) -> int:
+        """One applied update batch mutated ``changed_ids``' rows: drop
+        their cached payloads on exactly the ranks that hold them.
+        Returns the number of entries dropped."""
+        if self.caches is None:
+            return 0
+        changed = [int(v) for v in changed_ids]
+        dropped = 0
+        self.invalidations_broadcast_equiv += self.p * len(changed)
+        for k, cache in enumerate(self.caches):
+            st = self.stats[k]
+            payloads = self._payloads[k]
+            for v in changed:
+                if not cache.contains(v):
+                    continue  # targeted fanout: rank k never sees v
+                self.invalidations_sent += 1
+                if cache.invalidate(v):
+                    st.invalidations += 1
+                    dropped += 1
+                if payloads.pop(v, None) is not None:
+                    st.stale_payloads_dropped += 1
+            self._prune_evicted(k)
+        return dropped
+
+    # hook-compatible alias: coherence layers call ``notify_batch`` on
+    # every registered listener; the runtime is such a listener.
+    def notify_batch(self, changed_ids: Iterable[int]) -> None:
+        self.invalidate(changed_ids)
+
+    def _prune_evicted(self, rank: int) -> None:
+        """Payloads of entries the cache evicted on its own are dead
+        weight (never returned — a future get misses); drop them."""
+        if self.caches is None:
+            return
+        cache = self.caches[rank]
+        payloads = self._payloads[rank]
+        dead = [k for k in payloads if not cache.contains(k)]
+        for k in dead:
+            del payloads[k]
+
+    def audit_rank(self, rank: int) -> Tuple[int, int]:
+        """(cached_entries, stale_entries) for one rank: every resident
+        payload compared against the authoritative store row."""
+        if self.caches is None:
+            return 0, 0
+        self._prune_evicted(rank)
+        payloads = self._payloads[rank]
+        stale = 0
+        for v, row in payloads.items():
+            if not np.array_equal(row, self.store.row(v)):
+                stale += 1
+        return len(payloads), stale
+
+    def audit_freshness(self) -> Tuple[int, int]:
+        """(cached, stale) summed over every rank — the freshness bound
+        holds iff stale == 0 everywhere."""
+        cached = stale = 0
+        for k in range(self.p):
+            c, s = self.audit_rank(k)
+            cached += c
+            stale += s
+        return cached, stale
+
+    # ---------------- aggregated metrics ----------------
+    def aggregate_stats(self) -> ProviderStats:
+        return merge_counter_dataclasses(ProviderStats, self.stats)
+
+    def merged_cache_stats(self) -> CacheStats:
+        if self.caches is None:
+            return CacheStats()
+        return merge_cache_stats([c.stats for c in self.caches])
+
+    @property
+    def invalidation_fanout_saved(self) -> int:
+        """Messages a broadcast invalidation scheme would have sent that
+        the targeted fanout did not."""
+        return self.invalidations_broadcast_equiv - self.invalidations_sent
+
+    def cross_rank_rows_served(self) -> int:
+        return int(self.serve_rows.sum())
+
+    # ---------------- static pull schedule ----------------
+    def attach_problem(self, problem) -> None:
+        """Carry the epoch engine's compiled pull schedule so streaming
+        deltas can keep it fresh (``maintain_schedule``)."""
+        self.problem = problem
+
+    def maintain_schedule(
+        self,
+        ins: np.ndarray,
+        dele: np.ndarray,
+        *,
+        rebuild_width: Optional[int] = None,
+    ) -> bool:
+        """Patch the attached schedule for one applied update batch.
+
+        Uses ``ShardedLCCProblem.apply_delta`` (O(delta) row/worklist
+        patching + vectorized schedule recompile); on width overflow —
+        a touched vertex outgrew the padded row width — falls back to a
+        from-scratch ``build_sharded_problem`` against the bound store,
+        keeping the problem's build parameters (requested rounds, cache
+        residency, dedup) and doubling the width for headroom unless
+        ``rebuild_width`` overrides it. Returns True if the incremental
+        path succeeded, False if the fallback rebuild ran."""
+        from .rma import ScheduleWidthOverflow, build_sharded_problem
+
+        if self.problem is None:
+            return True
+        try:
+            self.problem.apply_delta(ins, dele)
+            self.schedule_deltas += 1
+            return True
+        except ScheduleWidthOverflow:
+            prob = self.problem
+            csr = (
+                self.store.to_csr()
+                if hasattr(self.store, "to_csr")
+                else self.store
+            )
+            if rebuild_width is None:
+                rebuild_width = max(2 * int(csr.max_degree), 2 * prob.width, 1)
+            cache = (
+                StaticDegreeCache(vertex_ids=prob.cache_ids)
+                if prob.cache_ids.size
+                else None
+            )
+            self.problem = build_sharded_problem(
+                csr,
+                self.p,
+                n_rounds=prob.n_rounds_requested,
+                cache=cache,
+                width=rebuild_width,
+                dedup_rounds=prob.dedup_rounds,
+            )
+            self.schedule_rebuilds += 1
+            return False

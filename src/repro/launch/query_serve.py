@@ -4,16 +4,27 @@ queries with cache-backed remote reads over a live R-MAT graph.
     python -m repro.launch.query_serve --smoke
     python -m repro.launch.query_serve --scale 12 --queries 4000 \
         --workload zipf --batch-window 64 --write-frac 0.2 --p 8
+    python -m repro.launch.query_serve --smoke --ranks 4   # cross-rank
 
-Builds the graph, stands up a ``LiveQueryService`` (streaming engine +
-degree-scored cache-backed row provider + microbatching scheduler), and
-drives a closed-loop read-write workload: query groups drain through the
-scheduler in ``--batch-window`` microbatches, update batches mutate the
-store and invalidate the provider's cached rows through the coherence
-hook. Reports throughput, p50/p99 latency, provider hit rate, and — with
+Builds the graph, stands up a ``LiveQueryService`` over the shared
+``ShardedRuntime`` (streaming engine + degree-scored cache-backed row
+providers + microbatching scheduler), and drives a closed-loop
+read-write workload: query groups drain through the scheduler in
+``--batch-window`` microbatches, update batches mutate the store and
+invalidate cached rows through the runtime's targeted coherence fanout.
+
+``--ranks p`` switches on **cross-rank serving**: p provider/engine
+instances over one runtime, every query routed to the rank that owns its
+target vertex, remote rows shipped owner -> requester through that
+rank's cache (the dynamic analogue of the static engine's all-to-all
+serve lists). Per-rank cache/read stats and the cross-rank transport
+totals are reported alongside the aggregate. ``--p`` without ``--ranks``
+keeps the classic single-rank view of a p-way partition.
+
+Reports throughput, p50/p99 latency, provider hit rate, and — with
 ``--verify`` (on in ``--smoke``) — recomputes every point query against
 a from-scratch recount of the current snapshot (bit-exact) and audits
-that zero cached rows are stale.
+that zero cached rows are stale on any rank.
 """
 from __future__ import annotations
 
@@ -37,6 +48,13 @@ def main(argv=None):
     ap.add_argument("--updates-per-event", type=int, default=64)
     ap.add_argument("--p", type=int, default=4,
                     help="simulated ranks (owner partition for remote reads)")
+    ap.add_argument("--ranks", type=int, default=0,
+                    help="cross-rank serving: run this many provider/engine "
+                         "instances over the runtime, routing each query to "
+                         "its owner rank (0: single-rank view of --p)")
+    ap.add_argument("--max-wait-ms", type=float, default=None,
+                    help="deadline-aware batching: flush a partial window "
+                         "once its oldest query waited this long")
     ap.add_argument("--cache-kib", type=int, default=1024)
     ap.add_argument("--uncached", action="store_true",
                     help="DirectRowProvider baseline instead of the cache")
@@ -59,14 +77,20 @@ def main(argv=None):
 
     n = 1 << args.scale
     csr = rmat_graph(args.scale, args.edge_factor, seed=args.seed)
+    cross_rank = args.ranks > 0
+    p = args.ranks if cross_rank else args.p
     print(f"R-MAT S{args.scale} EF{args.edge_factor}: n={n}, m={csr.m} "
-          f"(directed), max deg {csr.max_degree}")
+          f"(directed), max deg {csr.max_degree}"
+          + (f"  [cross-rank serving, p={p}]" if cross_rank else ""))
 
     svc = LiveQueryService(
         csr,
-        p=args.p,
+        p=p,
+        cross_rank=cross_rank,
         cache_bytes=args.cache_kib << 10,
         max_batch=args.batch_window,
+        max_wait=(args.max_wait_ms * 1e-3
+                  if args.max_wait_ms is not None else None),
         uncached=args.uncached,
     )
 
@@ -92,7 +116,19 @@ def main(argv=None):
             res = svc.apply_updates(ev.update)
             n_updates += res.n_inserted + res.n_deleted
             continue
-        results = svc.scheduler.run(ev.queries)
+        if args.max_wait_ms is None:
+            results = svc.scheduler.run(ev.queries)
+        else:
+            # deadline-aware serving: submit one at a time and poll —
+            # full windows dispatch immediately, the trailing partial
+            # window sits until its oldest query ages past the deadline
+            results = []
+            for q in ev.queries:
+                svc.scheduler.submit(q)
+                results.extend(svc.scheduler.poll())
+            while svc.scheduler.pending:
+                time.sleep(args.max_wait_ms * 1e-3 / 8)
+                results.extend(svc.scheduler.poll())
         served += len(results)
         if args.verify:
             snap = svc.store.to_csr()
@@ -118,19 +154,33 @@ def main(argv=None):
         print(f"note: stream exhausted at {served}/{args.queries} queries")
 
     lat = svc.scheduler.latency_summary()
-    st = svc.provider.stats
+    rt = svc.runtime
+    st = rt.aggregate_stats() if cross_rank else svc.provider.stats
     print(f"served {served} queries in {wall:.2f}s wall "
           f"({served / max(wall, 1e-9):,.0f} q/s end-to-end; "
           f"{lat.throughput_qps:,.0f} q/s in-engine), "
           f"{n_updates} interleaved updates, T={svc.triangle_count}")
     print(f"latency: p50 {lat.p50_ms:.2f} ms  p90 {lat.p90_ms:.2f} ms  "
           f"p99 {lat.p99_ms:.2f} ms  max {lat.max_ms:.2f} ms  "
-          f"(window={args.batch_window})")
-    print(f"provider: {st.local_reads} local / {st.remote_reads} remote "
+          f"(window={args.batch_window})"
+          + (f"  deadline flushes {svc.scheduler.n_deadline_flushes}, "
+             f"priority {svc.scheduler.n_priority_flushes}"
+             if args.max_wait_ms is not None else ""))
+    scope = f"runtime[p={p}]" if cross_rank else "provider"
+    print(f"{scope}: {st.local_reads} local / {st.remote_reads} remote "
           f"reads, hit rate {st.hit_rate:.1%}, "
           f"{st.invalidations} invalidations, "
           f"{st.bytes_fetched} B fetched, "
           f"modeled remote time {st.modeled_comm_s * 1e3:.2f} ms")
+    if cross_rank:
+        for k, sk in enumerate(rt.stats):
+            print(f"  rank {k}: {sk.local_reads} local / "
+                  f"{sk.remote_reads} remote, hit rate {sk.hit_rate:.1%}, "
+                  f"{sk.cache_misses} misses, {sk.invalidations} inval, "
+                  f"{sk.bytes_fetched} B")
+        print(f"cross-rank transport: {rt.cross_rank_rows_served()} rows "
+              f"shipped owner->requester, invalidation fanout saved "
+              f"{rt.invalidation_fanout_saved} msgs vs broadcast")
     print(f"pair dedup: {svc.engine.n_pairs_raw} raw -> "
           f"{svc.engine.n_pairs_total} intersected")
     if args.verify:

@@ -3,20 +3,32 @@ a replayed R-MAT edge stream with batched insert/delete updates.
 
     python -m repro.launch.stream_run --scale 10 --batches 8
     python -m repro.launch.stream_run --scale 12 --batches 32 \
-        --delete-frac 0.2 --cache-rows 512 --p 8 --checkpoint-every 4
+        --delete-frac 0.2 --cache-rows 512 --ranks 8 --checkpoint-every 4 \
+        --maintain-schedule
 
-Each batch flows through ``StreamingLCCEngine``: the delta row pairs are
-intersected via the batched Pallas ``intersect_count`` path, per-vertex
-triangle tallies and LCC are patched in place, the ``DynamicCSR`` absorbs
-the updates (compacting when the delta buffer outgrows its threshold),
-and the coherence layer replays the delta access stream through the
-CLaMPI simulator + static degree cache. At every checkpoint the engine
-state is verified **bit-exactly** against a from-scratch
-``triangles_per_vertex`` / ``lcc_scores`` recount of the compacted graph.
+Each batch flows through ``StreamingLCCEngine`` over the shared
+``ShardedRuntime``: the delta worklist is partitioned by owner rank and
+each shard's row pairs are intersected via the batched Pallas
+``intersect_count`` path, per-vertex triangle tallies and LCC are patched
+in place, the ``DynamicCSR`` absorbs the updates (compacting when the
+delta buffer outgrows its threshold), and the coherence layer replays the
+delta access stream through the runtime's per-rank CLaMPI caches +
+static degree cache, fanning invalidations only to the ranks that cached
+the touched rows. At every checkpoint the engine state is verified
+**bit-exactly** against a from-scratch ``triangles_per_vertex`` /
+``lcc_scores`` recount of the compacted graph.
+
+With ``--maintain-schedule`` the runtime also carries the epoch engine's
+compiled pull schedule and keeps it fresh per batch via the incremental
+``ShardedLCCProblem.apply_delta`` (falling back to a from-scratch build
+on padded-width overflow); every checkpoint additionally verifies the
+maintained schedule bit-exact against ``build_sharded_problem`` on the
+current snapshot.
 
 Reports per batch: effective ops, updates/sec, triangle count; at the
-end: total throughput, cache hit rate on the delta stream, invalidations,
-static-cache rebuilds, and compactions.
+end: total throughput, per-rank worklist balance, cache hit rate on the
+delta stream, invalidation fanout savings, static-cache rebuilds,
+schedule maintenance counts, and compactions.
 """
 from __future__ import annotations
 
@@ -35,9 +47,17 @@ def main(argv=None):
     ap.add_argument("--delete-frac", type=float, default=0.15,
                     help="fraction of each batch that deletes prior edges")
     ap.add_argument("--p", type=int, default=4,
-                    help="simulated ranks for the coherence replay")
+                    help="runtime ranks (1D partition for sharded worklists "
+                         "and the coherence replay)")
+    ap.add_argument("--ranks", type=int, default=None,
+                    help="alias for --p (overrides it when given)")
+    ap.add_argument("--adversarial", action="store_true",
+                    help="hub-targeted deletes (stresses degree-score drift)")
     ap.add_argument("--cache-rows", type=int, default=256)
     ap.add_argument("--clampi-kib", type=int, default=1024)
+    ap.add_argument("--maintain-schedule", action="store_true",
+                    help="keep a compiled pull schedule fresh incrementally "
+                         "(verified vs a from-scratch build per checkpoint)")
     ap.add_argument("--checkpoint-every", type=int, default=1,
                     help="verify vs from-scratch recount every k batches "
                          "(<= 0: only the final verification)")
@@ -47,21 +67,24 @@ def main(argv=None):
                     help="skip the Pallas path (pure-numpy masks only)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    ranks = args.ranks if args.ranks is not None else args.p
 
-    from ..graphs.rmat import rmat_stream
+    from ..core.rma import assert_problems_equal, build_sharded_problem
+    from ..graphs.rmat import rmat_adversarial_stream, rmat_stream
     from ..streaming import StreamingCacheCoherence, StreamingLCCEngine
 
     n = 1 << args.scale
     total_ops = args.edge_factor << args.scale
     batch_size = -(-total_ops // args.batches)
     print(f"R-MAT S{args.scale} EF{args.edge_factor} stream: n={n}, "
-          f"{total_ops} inserts (+{args.delete_frac:.0%} deletes) in "
-          f"{args.batches} batches of {batch_size}")
+          f"{total_ops} inserts (+{args.delete_frac:.0%} deletes"
+          f"{', hub-targeted' if args.adversarial else ''}) in "
+          f"{args.batches} batches of {batch_size}, ranks={ranks}")
 
     coh = StreamingCacheCoherence(
         n,
         np.zeros(n, np.int64),
-        p=args.p,
+        p=ranks,
         cache_rows=args.cache_rows,
         clampi_bytes=args.clampi_kib << 10,
     )
@@ -71,18 +94,38 @@ def main(argv=None):
         compact_threshold=args.compact_threshold,
         coherence=coh,
     )
+    runtime = eng.runtime
+    if args.maintain_schedule:
+        runtime.attach_problem(
+            build_sharded_problem(eng.store.to_csr(), ranks, width=64)
+        )
 
+    def check_schedule():
+        snap = eng.store.to_csr()
+        prob = runtime.problem
+        fresh = build_sharded_problem(
+            snap,
+            ranks,
+            n_rounds=prob.n_rounds_requested,
+            width=prob.width,
+            dedup_rounds=prob.dedup_rounds,
+        )
+        assert_problems_equal(prob, fresh)
+
+    stream = (
+        rmat_adversarial_stream(
+            args.scale, args.edge_factor, batch_size=batch_size,
+            delete_frac=args.delete_frac, seed=args.seed,
+        )
+        if args.adversarial
+        else rmat_stream(
+            args.scale, args.edge_factor, batch_size=batch_size,
+            delete_frac=args.delete_frac, seed=args.seed,
+        )
+    )
     wall = 0.0
     verified_last = False
-    for i, batch in enumerate(
-        rmat_stream(
-            args.scale,
-            args.edge_factor,
-            batch_size=batch_size,
-            delete_frac=args.delete_frac,
-            seed=args.seed,
-        )
-    ):
+    for i, batch in enumerate(stream):
         t0 = time.perf_counter()
         res = eng.apply_batch(batch)
         dt = time.perf_counter() - t0
@@ -92,30 +135,50 @@ def main(argv=None):
         line = (f"batch {i:3d}: +{res.n_inserted} -{res.n_deleted} "
                 f"(noop {res.n_noop})  T={eng.triangle_count}  "
                 f"{ops / max(dt, 1e-9):,.0f} upd/s"
-                + ("  [compacted]" if res.compacted else ""))
+                + ("  [compacted]" if res.compacted else "")
+                + ("  [schedule rebuilt]"
+                   if res.schedule_incremental is False else ""))
         if (not args.no_verify and args.checkpoint_every > 0
                 and (i + 1) % args.checkpoint_every == 0):
             eng.verify()
+            if args.maintain_schedule:
+                check_schedule()
             verified_last = True
             line += "  checkpoint: exact vs recount"
+            if args.maintain_schedule:
+                line += " + schedule"
         print(line, flush=True)
 
     rep = coh.report
+    shares = eng.shard_pairs / max(int(eng.shard_pairs.sum()), 1)
     print(f"\n{eng.n_updates} effective updates in {wall:.2f}s "
           f"({eng.n_updates / max(wall, 1e-9):,.0f} upd/s), "
           f"{eng.delta_pairs_total} delta row pairs, "
           f"{eng.store.n_compactions} compactions")
-    print(f"coherence[p={args.p}]: delta-stream hit rate {rep.hit_rate:.1%} "
+    print(f"shards[p={ranks}]: worklist shares "
+          f"[{', '.join(f'{s:.0%}' for s in shares)}]")
+    print(f"coherence[p={ranks}]: delta-stream hit rate {rep.hit_rate:.1%} "
           f"(static {rep.static_hits}, clampi {rep.clampi_hits} hits / "
           f"{rep.remote_reads} remote reads), "
-          f"{rep.invalidations} invalidations, "
+          f"{rep.invalidations} invalidations "
+          f"(fanout saved {runtime.invalidation_fanout_saved} msgs vs "
+          f"broadcast), "
           f"{rep.static_rebuilds} static rebuilds, "
           f"{coh.clampi.stats.evictions} evictions, "
           f"modeled comm {coh.total_comm_time * 1e3:.2f} ms")
+    if args.maintain_schedule:
+        print(f"schedule: {runtime.schedule_deltas} incremental deltas, "
+              f"{runtime.schedule_rebuilds} width-overflow rebuilds "
+              f"(width {runtime.problem.width}, e_max "
+              f"{runtime.problem.e_max}, s_max {runtime.problem.s_max})")
     if not args.no_verify:
         if not verified_last:  # last batch's checkpoint already recounted
             eng.verify()
-        print("final state verified bit-exact vs from-scratch recount")
+            if args.maintain_schedule:
+                check_schedule()
+        print("final state verified bit-exact vs from-scratch recount"
+              + (" (incl. maintained schedule)"
+                 if args.maintain_schedule else ""))
     return 0
 
 

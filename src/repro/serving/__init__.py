@@ -4,17 +4,22 @@ Turns the batch-epoch reproduction into a request-driven service:
 
 - ``requests``  — ``Query``/``QueryResult`` types (lcc, triangles,
                   common_neighbors, top_k_lcc)
-- ``provider``  — row read path: ``DirectRowProvider`` (uncached) and
-                  ``CacheBackedRowProvider`` (degree-scored ClampiCache
-                  carrying real row payloads, coherence-invalidated)
+- ``provider``  — row read path: rank views over the shared
+                  ``core.runtime.ShardedRuntime`` (``DirectRowProvider``
+                  uncached, ``CacheBackedRowProvider`` degree-scored
+                  ClampiCache carrying real payloads, runtime-fanout
+                  coherence)
 - ``engine``    — ``QueryEngine``: batched point-query execution with
                   batch-wide row-fetch + pair dedup over the Pallas
-                  intersect kernels
-- ``scheduler`` — ``MicrobatchScheduler``: request coalescing + p50/p99
-                  latency accounting
+                  intersect kernels; ``ShardedQueryEngine``: p engines
+                  routing each query to its owner rank
+- ``scheduler`` — ``MicrobatchScheduler``: request coalescing with FIFO
+                  + deadline (``max_wait``) + priority (urgent) drains,
+                  p50/p99 latency accounting
 - ``workload``  — uniform / Zipf(hub-skewed) / read-write generators
 - ``service``   — ``LiveQueryService``: queries + streaming updates over
-                  one shared store with a verified staleness bound
+                  one shared store/runtime with a verified staleness
+                  bound (single-rank or cross-rank)
 """
 from .requests import Query, QueryKind, QueryResult  # noqa: F401
 from .provider import (  # noqa: F401
@@ -22,8 +27,9 @@ from .provider import (  # noqa: F401
     DirectRowProvider,
     ProviderCoherenceHook,
     ProviderStats,
+    RuntimeRowProvider,
 )
-from .engine import QueryEngine  # noqa: F401
+from .engine import QueryEngine, ShardedQueryEngine  # noqa: F401
 from .scheduler import MicrobatchScheduler  # noqa: F401
 from .metrics import LatencyRecorder, LatencySummary  # noqa: F401
 from .workload import (  # noqa: F401

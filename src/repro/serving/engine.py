@@ -31,12 +31,13 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..core.runtime import ShardedRuntime
 from ..core.triangles import lcc_scores, triangles_per_vertex
 from ..kernels.point_query import batched_pair_counts
-from .provider import DirectRowProvider
+from .provider import DirectRowProvider, RuntimeRowProvider
 from .requests import Query, QueryKind, QueryResult
 
-__all__ = ["QueryEngine"]
+__all__ = ["QueryEngine", "ShardedQueryEngine"]
 
 
 class QueryEngine:
@@ -195,3 +196,73 @@ class QueryEngine:
             self._static_lcc = lcc_scores(csr, triangles_per_vertex(csr))
             self._static_lcc_token = token
         return self._static_lcc
+
+
+class ShardedQueryEngine:
+    """p per-rank ``QueryEngine`` instances over one shared runtime.
+
+    Each microbatch is split by *owner rank* — ``lcc(v)``/``triangles(v)``
+    execute where ``v`` lives, ``common_neighbors(u, v)`` where ``u``
+    lives, ``top_k_lcc`` at rank 0 (it reads the replicated incremental
+    LCC array) — and each rank's sub-batch runs through that rank's
+    engine and provider view, so remote rows pass through that rank's
+    cache exactly as the static engine's all-to-all serve lists would
+    ship them. Results reassemble in submission order, so answers are
+    independent of the routing (the scheduler and callers can't tell p=1
+    from p=8 apart from the metrics)."""
+
+    def __init__(
+        self,
+        store,
+        runtime: ShardedRuntime,
+        *,
+        use_kernel: Optional[bool] = None,
+        block_e: int = 128,
+        interpret: Optional[bool] = None,
+        lcc_source: Optional[Callable[[], np.ndarray]] = None,
+    ):
+        self.runtime = runtime
+        self.engines = [
+            QueryEngine(
+                store,
+                RuntimeRowProvider(runtime, rank),
+                use_kernel=use_kernel,
+                block_e=block_e,
+                interpret=interpret,
+                lcc_source=lcc_source,
+            )
+            for rank in range(runtime.p)
+        ]
+        self.store = store
+
+    def route(self, q: Query) -> int:
+        """Owner rank that executes ``q``."""
+        if q.kind == QueryKind.TOP_K_LCC:
+            return 0
+        return int(self.runtime.part.owner(q.u))
+
+    def execute_batch(self, queries: Sequence[Query]) -> List[QueryResult]:
+        by_rank: Dict[int, List[int]] = {}
+        for i, q in enumerate(queries):
+            by_rank.setdefault(self.route(q), []).append(i)
+        out: List[Optional[QueryResult]] = [None] * len(queries)
+        for rank, idxs in sorted(by_rank.items()):
+            results = self.engines[rank].execute_batch(
+                [queries[i] for i in idxs]
+            )
+            for i, r in zip(idxs, results):
+                out[i] = r
+        return out  # type: ignore[return-value]
+
+    # ---------------- aggregated accounting ----------------
+    @property
+    def n_queries(self) -> int:
+        return sum(e.n_queries for e in self.engines)
+
+    @property
+    def n_pairs_total(self) -> int:
+        return sum(e.n_pairs_total for e in self.engines)
+
+    @property
+    def n_pairs_raw(self) -> int:
+        return sum(e.n_pairs_raw for e in self.engines)

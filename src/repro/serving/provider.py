@@ -1,115 +1,123 @@
 """Row providers: how the query engine reads adjacency rows.
 
-The 1D partition gives each device rank a contiguous vertex block; rows
-of locally-owned vertices are free, rows of remote vertices cost a
-modeled RMA get (``NetworkModel``, paper §IV-D1). Two providers:
+A provider is a *view* of the shared ``ShardedRuntime`` pinned to one
+rank: the runtime owns the 1D partition, the per-rank degree-scored
+``ClampiCache`` instances (carrying real row payloads), the
+``NetworkModel``, and the coherence fanout; the provider only says
+*which rank is reading*. This is what removed the old rank-0-only
+assumption — cross-rank serving instantiates p providers over one
+runtime, and each query executes at its owner rank.
 
-- ``DirectRowProvider`` — every remote read goes to the owner
-  (uncached baseline; always fresh).
-- ``CacheBackedRowProvider`` — remote reads are admitted/evicted by a
-  ``ClampiCache`` scored with the paper's degree centrality (§III-B2),
-  and — unlike the trace-only simulators in ``core/rma.py`` — this
-  provider *carries the row payloads*: a cache hit returns the payload
-  captured at fetch time, NOT the authoritative store row. Coherence is
-  therefore a correctness property here, not bookkeeping: if the graph
+- ``DirectRowProvider`` — view of an uncached runtime: every non-local
+  read pays the full modeled remote get; rows always come from the
+  authoritative store (always fresh).
+- ``CacheBackedRowProvider`` — view of a cached runtime. A cache hit
+  returns the payload captured at fetch time, NOT the authoritative
+  store row, so coherence is a correctness property: if the graph
   mutates and nobody calls ``notify_batch``, hits serve stale rows and
   query answers diverge from a recount. ``StreamingCacheCoherence``
   (or ``ProviderCoherenceHook``) delivers exactly that notification
-  after every applied update batch, restoring the staleness bound of
-  zero applied-but-unobserved batches — ``audit_freshness`` verifies it.
+  after every applied update batch, and the runtime fans it out only to
+  the ranks that cached the touched rows — ``audit_freshness`` verifies
+  the resulting staleness bound of zero applied-but-unobserved batches.
 
 Point-query workloads are degree-skewed (a hub appears in the neighbor
 lists of many queried vertices), which is the paper's Observation 3.1
-reuse argument in its strongest form — the reason this provider exists.
+reuse argument in its strongest form — the reason the cached runtime
+exists.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, Iterable, Optional, Sequence
 
 import numpy as np
 
-from ..core.cache import ClampiCache, NetworkModel
-from ..core.partition import Partition1D, partition_1d
+from ..core.cache import NetworkModel
+from ..core.runtime import ProviderStats, ShardedRuntime
 
 __all__ = [
     "ProviderStats",
+    "RuntimeRowProvider",
     "DirectRowProvider",
     "CacheBackedRowProvider",
     "ProviderCoherenceHook",
 ]
 
-ID_BYTES = 4
 
+class RuntimeRowProvider:
+    """One rank's read path over a shared ``ShardedRuntime``."""
 
-@dataclasses.dataclass
-class ProviderStats:
-    local_reads: int = 0
-    remote_reads: int = 0  # reads of non-local rows (pre-cache)
-    cache_hits: int = 0
-    cache_misses: int = 0
-    invalidations: int = 0
-    stale_payloads_dropped: int = 0
-    bytes_fetched: int = 0  # remote bytes actually moved (post-cache)
-    modeled_comm_s: float = 0.0
+    def __init__(self, runtime: ShardedRuntime, rank: int = 0):
+        self.runtime = runtime
+        self.rank = int(rank)
+
+    # ---------------- runtime views ----------------
+    @property
+    def store(self):
+        return self.runtime.store
 
     @property
-    def hit_rate(self) -> float:
-        r = self.remote_reads
-        return self.cache_hits / r if r else 0.0
+    def part(self):
+        return self.runtime.part
+
+    @property
+    def net(self) -> NetworkModel:
+        return self.runtime.net
+
+    @property
+    def cache(self):
+        """This rank's ClampiCache (None on an uncached runtime)."""
+        return (
+            self.runtime.caches[self.rank]
+            if self.runtime.caches is not None
+            else None
+        )
+
+    @property
+    def stats(self) -> ProviderStats:
+        return self.runtime.stats[self.rank]
+
+    # ---------------- reads ----------------
+    def fetch_rows(self, vertices: Sequence[int]) -> Dict[int, np.ndarray]:
+        """Sorted adjacency row per distinct vertex (callers dedup)."""
+        return self.runtime.fetch_rows(self.rank, vertices)
+
+    # ---------------- coherence ----------------
+    def notify_batch(self, changed_ids: Iterable[int]) -> None:
+        """Fan one applied update batch out through the runtime (only
+        ranks that cached the touched rows are told)."""
+        self.runtime.invalidate(changed_ids)
+
+    def audit_freshness(self) -> tuple:
+        """(cached_entries, stale_entries) for THIS rank's view."""
+        return self.runtime.audit_rank(self.rank)
 
 
-class DirectRowProvider:
-    """Uncached baseline: every non-local row read pays the full modeled
-    remote get; rows always come from the authoritative store."""
+class DirectRowProvider(RuntimeRowProvider):
+    """Uncached baseline: a rank view over an uncached runtime."""
 
     def __init__(
         self,
-        store,
+        store=None,
         *,
         p: int = 1,
         rank: int = 0,
         network: Optional[NetworkModel] = None,
+        runtime: Optional[ShardedRuntime] = None,
     ):
-        self.store = store
-        self.part: Partition1D = partition_1d(store.n, p)
-        self.rank = int(rank)
-        self.net = network or NetworkModel()
-        self.stats = ProviderStats()
-
-    def fetch_rows(self, vertices: Sequence[int]) -> Dict[int, np.ndarray]:
-        """Sorted adjacency row per distinct vertex (callers dedup)."""
-        out: Dict[int, np.ndarray] = {}
-        st = self.stats
-        for v in vertices:
-            v = int(v)
-            row = self.store.row(v)
-            if int(self.part.owner(v)) == self.rank:
-                st.local_reads += 1
-            else:
-                st.remote_reads += 1
-                size = row.size * ID_BYTES
-                st.cache_misses += 1
-                st.bytes_fetched += size
-                st.modeled_comm_s += self.net.remote(size)
-            out[v] = row
-        return out
-
-    def notify_batch(self, changed_ids: Iterable[int]) -> None:
-        pass  # always reads the authoritative store: nothing to invalidate
-
-    def audit_freshness(self) -> tuple:
-        """(cached_entries, stale_entries) — trivially (0, 0)."""
-        return 0, 0
+        if runtime is None:
+            runtime = ShardedRuntime(store, p, network=network, uncached=True)
+        super().__init__(runtime, rank)
 
 
-class CacheBackedRowProvider:
-    """Degree-scored ``ClampiCache`` in front of the owner's rows, with
-    real payloads (see module docstring for the coherence contract)."""
+class CacheBackedRowProvider(RuntimeRowProvider):
+    """Rank view over a cached runtime (degree-scored ClampiCache in
+    front of the owner's rows, with real payloads — see the module
+    docstring for the coherence contract)."""
 
     def __init__(
         self,
-        store,
+        store=None,
         *,
         p: int = 4,
         rank: int = 0,
@@ -117,104 +125,32 @@ class CacheBackedRowProvider:
         table_slots: Optional[int] = None,
         network: Optional[NetworkModel] = None,
         use_degree_score: bool = True,
+        runtime: Optional[ShardedRuntime] = None,
     ):
-        self.store = store
-        self.part: Partition1D = partition_1d(store.n, p)
-        self.rank = int(rank)
-        self.net = network or NetworkModel()
-        self.cache = ClampiCache(
-            capacity_bytes,
-            table_slots or max(1, store.n // 4),
-            mode="always",
-            network=self.net,
-        )
-        self.use_degree_score = use_degree_score
-        self.stats = ProviderStats()
-        # payloads mirror cache residency: key -> row copy at fetch time
-        self._payloads: Dict[int, np.ndarray] = {}
-
-    # ---------------- reads ----------------
-    def fetch_rows(self, vertices: Sequence[int]) -> Dict[int, np.ndarray]:
-        """Sorted adjacency row per distinct vertex (callers dedup).
-
-        Local rows bypass the cache; remote rows go through ClampiCache
-        admission and return the cached payload on hit."""
-        out: Dict[int, np.ndarray] = {}
-        st = self.stats
-        deg = self.store.degrees
-        for v in vertices:
-            v = int(v)
-            if int(self.part.owner(v)) == self.rank:
-                st.local_reads += 1
-                out[v] = self.store.row(v)
-                continue
-            st.remote_reads += 1
-            d = int(deg[v])
-            size = d * ID_BYTES
-            score = float(d) if self.use_degree_score else None
-            if self.cache.get(v, size, score=score):
-                st.cache_hits += 1
-                out[v] = self._payloads[v]
-                continue
-            st.cache_misses += 1
-            st.bytes_fetched += size
-            row = self.store.row(v).copy()
-            if self.cache.contains(v):  # admitted after the miss
-                self._payloads[v] = row
-            else:
-                self._payloads.pop(v, None)
-            out[v] = row
-        # single comm ledger: the cache already charges remote reads on
-        # miss plus hit/insert probe costs (paper §IV-D1) — mirror it
-        # instead of re-deriving a biased copy here.
-        st.modeled_comm_s = self.cache.stats.comm_time
-        return out
-
-    # ---------------- coherence ----------------
-    def notify_batch(self, changed_ids: Iterable[int]) -> None:
-        """One applied update batch mutated the rows of ``changed_ids``:
-        drop their cached payloads so the next read refetches fresh data.
-        Keeps the verifiable staleness bound at zero applied-but-
-        unobserved batches."""
-        st = self.stats
-        for v in changed_ids:
-            v = int(v)
-            if self.cache.invalidate(v):
-                st.invalidations += 1
-            if self._payloads.pop(v, None) is not None:
-                st.stale_payloads_dropped += 1
-        self._prune_evicted()
-
-    def _prune_evicted(self) -> None:
-        """Payloads of entries ClampiCache evicted on its own are dead
-        weight (never returned — a future get misses); drop them."""
-        dead = [k for k in self._payloads if not self.cache.contains(k)]
-        for k in dead:
-            del self._payloads[k]
-
-    def audit_freshness(self) -> tuple:
-        """(cached_entries, stale_entries): compare every resident payload
-        against the authoritative store row. With coherence notifications
-        wired up, stale_entries == 0 — the staleness bound, verified."""
-        self._prune_evicted()
-        stale = 0
-        for v, row in self._payloads.items():
-            if not np.array_equal(row, self.store.row(v)):
-                stale += 1
-        return len(self._payloads), stale
+        if runtime is None:
+            runtime = ShardedRuntime(
+                store,
+                p,
+                cache_bytes=capacity_bytes,
+                table_slots=table_slots,
+                network=network,
+                use_degree_score=use_degree_score,
+            )
+        super().__init__(runtime, rank)
 
 
 class ProviderCoherenceHook:
     """Minimal streaming-engine coherence hook (same ``on_batch``
     signature as ``StreamingCacheCoherence``) that only forwards
-    mutations to row providers — for services that want freshness
-    without the CLaMPI delta-replay simulation."""
+    mutations to registered listeners (runtimes or providers) — for
+    services that want freshness without the CLaMPI delta-replay
+    simulation."""
 
-    def __init__(self, *providers):
-        self.providers = list(providers)
+    def __init__(self, *listeners):
+        self.providers = list(listeners)
 
-    def attach_provider(self, provider) -> None:
-        self.providers.append(provider)
+    def attach_provider(self, listener) -> None:
+        self.providers.append(listener)
 
     def on_batch(self, ins: np.ndarray, dele: np.ndarray, store) -> None:
         pairs = np.concatenate([ins, dele], axis=0)

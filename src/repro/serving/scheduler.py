@@ -12,13 +12,27 @@ padded batch. The scheduler
 - stamps each result with its submit-to-completion latency, feeding the
   p50/p99 ``LatencyRecorder``.
 
+Two drain policies coexist:
+
+- ``flush()`` — the closed-loop drain: empty the whole queue now
+  (callers that own the loop, e.g. the launchers and benchmarks).
+- ``poll()`` — deadline-aware batching for open-loop serving: a window
+  dispatches when it is *full* (``max_batch``), when the **oldest
+  pending query has waited ``max_wait`` seconds** (the latency deadline
+  — without it a trickle of requests would wait forever for a full
+  window), or when an **urgent** query is pending (priority flush:
+  ``submit(q, urgent=True)`` dispatches the current window immediately,
+  batching whatever happens to be queued in front of it). Otherwise
+  ``poll`` returns nothing and requests keep coalescing.
+
 ``max_batch=1`` degenerates to one-query-at-a-time serving — the
-baseline the serving benchmark compares against.
+baseline the serving benchmark compares against. The clock is
+injectable so deadline behavior is testable without sleeping.
 """
 from __future__ import annotations
 
 import time
-from typing import List, Sequence
+from typing import Callable, List, Optional, Sequence
 
 from .engine import QueryEngine
 from .metrics import LatencyRecorder, LatencySummary
@@ -28,45 +42,92 @@ __all__ = ["MicrobatchScheduler"]
 
 
 class MicrobatchScheduler:
-    def __init__(self, engine: QueryEngine, *, max_batch: int = 64):
+    def __init__(
+        self,
+        engine: QueryEngine,
+        *,
+        max_batch: int = 64,
+        max_wait: Optional[float] = None,
+        clock: Optional[Callable[[], float]] = None,
+    ):
         assert max_batch >= 1
+        assert max_wait is None or max_wait >= 0.0
         self.engine = engine
         self.max_batch = int(max_batch)
-        self._pending: List[tuple] = []  # (query, t_submit)
+        self.max_wait = max_wait
+        self._clock = clock or time.perf_counter
+        self._pending: List[tuple] = []  # (query, t_submit, urgent)
+        self._n_urgent = 0
         self.recorder = LatencyRecorder()
         self.n_batches = 0
+        self.n_deadline_flushes = 0
+        self.n_priority_flushes = 0
 
     # ---------------- request path ----------------
-    def submit(self, query: Query) -> None:
-        self._pending.append((query, time.perf_counter()))
+    def submit(self, query: Query, *, urgent: bool = False) -> None:
+        self._pending.append((query, self._clock(), bool(urgent)))
+        if urgent:
+            self._n_urgent += 1
 
     def submit_many(self, queries: Sequence[Query]) -> None:
-        t = time.perf_counter()
-        self._pending.extend((q, t) for q in queries)
+        t = self._clock()
+        self._pending.extend((q, t, False) for q in queries)
 
     @property
     def pending(self) -> int:
         return len(self._pending)
+
+    # ---------------- drain policies ----------------
+    def _due(self, now: float) -> Optional[str]:
+        """Why the front window should dispatch now (None: keep waiting)."""
+        if not self._pending:
+            return None
+        if len(self._pending) >= self.max_batch:
+            return "full"
+        if self._n_urgent:
+            return "urgent"
+        if self.max_wait is not None and now - self._pending[0][1] >= self.max_wait:
+            return "deadline"
+        return None
+
+    def _drain_window(self) -> List[QueryResult]:
+        chunk = self._pending[: self.max_batch]
+        t0 = self._clock()
+        results = self.engine.execute_batch([q for q, _, _ in chunk])
+        t1 = self._clock()
+        # dequeue only after success: an engine error must leave the
+        # chunk queued (visible, retryable), not silently dropped
+        del self._pending[: self.max_batch]
+        self._n_urgent -= sum(1 for _, _, u in chunk if u)
+        self.recorder.record_wall(t1 - t0)
+        self.n_batches += 1
+        for (q, t_sub, _), r in zip(chunk, results):
+            r.latency_s = t1 - t_sub
+            self.recorder.record(r.latency_s)
+        return results
 
     def flush(self) -> List[QueryResult]:
         """Drain the queue in ``max_batch`` windows; returns all results
         in submission order."""
         out: List[QueryResult] = []
         while self._pending:
-            chunk = self._pending[: self.max_batch]
-            t0 = time.perf_counter()
-            results = self.engine.execute_batch([q for q, _ in chunk])
-            t1 = time.perf_counter()
-            # dequeue only after success: an engine error must leave the
-            # chunk queued (visible, retryable), not silently dropped
-            del self._pending[: self.max_batch]
-            self.recorder.record_wall(t1 - t0)
-            self.n_batches += 1
-            for (q, t_sub), r in zip(chunk, results):
-                r.latency_s = t1 - t_sub
-                self.recorder.record(r.latency_s)
-            out.extend(results)
+            out.extend(self._drain_window())
         return out
+
+    def poll(self) -> List[QueryResult]:
+        """Deadline-aware drain: dispatch windows only while one is due
+        (full / urgent pending / oldest past ``max_wait``); otherwise
+        return nothing and let requests keep coalescing."""
+        out: List[QueryResult] = []
+        while True:
+            reason = self._due(self._clock())
+            if reason is None:
+                return out
+            if reason == "deadline":
+                self.n_deadline_flushes += 1
+            elif reason == "urgent":
+                self.n_priority_flushes += 1
+            out.extend(self._drain_window())
 
     def run(self, queries: Sequence[Query]) -> List[QueryResult]:
         """Closed-loop convenience: submit all, drain to completion."""

@@ -4,12 +4,17 @@ Wires the pieces together so freshness is a property, not a hope:
 
 - one ``DynamicCSR`` store, owned by a ``StreamingLCCEngine`` that keeps
   exact per-vertex triangle counts + LCC under update batches;
-- a row provider (cache-backed by default) that the ``QueryEngine``
-  reads through;
+- one ``ShardedRuntime`` that owns the 1D partition, the per-rank
+  degree-scored caches, and the row transport;
+- either a single rank's view of that runtime (the classic single-rank
+  service) or — with ``cross_rank=True`` — p ``QueryEngine``/provider
+  instances routing every query to its owner rank
+  (``ShardedQueryEngine``);
 - a coherence hook on the streaming engine that, after every applied
-  batch, invalidates the provider's cached copies of every mutated row —
-  so queries observe the live graph with a staleness bound of zero
-  applied-but-unobserved batches (``verify()`` checks it).
+  batch, fans invalidations out through the runtime to exactly the
+  ranks that cached the mutated rows — so queries observe the live
+  graph with a staleness bound of zero applied-but-unobserved batches
+  (``verify()`` checks it across all ranks).
 
 ``apply_updates`` and ``flush`` must not interleave (single-writer
 semantics — the scheduler drains fully between update batches), which is
@@ -19,13 +24,12 @@ from __future__ import annotations
 
 from typing import List, Optional, Sequence
 
-import numpy as np
-
 from ..core.csr import CSRGraph
+from ..core.runtime import ShardedRuntime
 from ..streaming.coherence import StreamingCacheCoherence
 from ..streaming.incremental import BatchResult, StreamingLCCEngine
 from ..streaming.updates import EdgeBatch
-from .engine import QueryEngine
+from .engine import QueryEngine, ShardedQueryEngine
 from .provider import (
     CacheBackedRowProvider,
     DirectRowProvider,
@@ -44,8 +48,10 @@ class LiveQueryService:
         *,
         p: int = 4,
         rank: int = 0,
+        cross_rank: bool = False,
         cache_bytes: int = 1 << 20,
         max_batch: int = 64,
+        max_wait: Optional[float] = None,
         use_kernel: Optional[bool] = None,
         interpret: Optional[bool] = None,
         coherence: Optional[StreamingCacheCoherence] = None,
@@ -62,25 +68,62 @@ class LiveQueryService:
             **(stream_kw or {}),
         )
         self.store = self.stream.store
-        if provider is None:
-            provider = (
-                DirectRowProvider(self.store, p=p, rank=rank)
-                if uncached
-                else CacheBackedRowProvider(
-                    self.store, p=p, rank=rank, capacity_bytes=cache_bytes
-                )
+        if provider is not None:
+            # caller-supplied rank view: adopt its runtime
+            self.runtime = provider.runtime
+            self.runtime.bind_store(self.store)
+        elif coherence is not None:
+            # ONE runtime for all consumers: the coherence layer's
+            # partition/caches also carry the serving reads (its p wins
+            # over ours), so replay warmth, hit/miss stats, and the
+            # invalidation-fanout ledger are shared, not split.
+            self.runtime = coherence.runtime
+            self.runtime.bind_store(self.store)
+        else:
+            self.runtime = ShardedRuntime(
+                self.store, p, cache_bytes=cache_bytes, uncached=uncached
             )
-        self.provider = provider
-        hook.attach_provider(self.provider)
+        lcc_source = lambda: self.stream.lcc  # noqa: E731
+        if cross_rank:
+            assert provider is None, "cross_rank builds its own rank views"
+            self.engine = ShardedQueryEngine(
+                self.store,
+                self.runtime,
+                use_kernel=use_kernel,
+                interpret=interpret,
+                lcc_source=lcc_source,
+            )
+            self.providers = [e.provider for e in self.engine.engines]
+            self.provider = self.providers[rank]
+        else:
+            if provider is None:
+                provider = (
+                    DirectRowProvider(runtime=self.runtime, rank=rank)
+                    if uncached
+                    else CacheBackedRowProvider(
+                        runtime=self.runtime, rank=rank
+                    )
+                )
+            self.provider = provider
+            self.providers = [provider]
+            self.engine = QueryEngine(
+                self.store,
+                self.provider,
+                use_kernel=use_kernel,
+                interpret=interpret,
+                lcc_source=lcc_source,
+            )
+        self.cross_rank = cross_rank
+        # one coherence registration for the whole runtime: the fanout
+        # targets exactly the ranks holding each touched row. (When the
+        # hook IS a StreamingCacheCoherence over this same runtime it
+        # already invalidates it on every batch — don't register twice.)
+        if getattr(hook, "runtime", None) is not self.runtime:
+            hook.attach_provider(self.runtime)
         self.coherence = coherence
-        self.engine = QueryEngine(
-            self.store,
-            self.provider,
-            use_kernel=use_kernel,
-            interpret=interpret,
-            lcc_source=lambda: self.stream.lcc,
+        self.scheduler = MicrobatchScheduler(
+            self.engine, max_batch=max_batch, max_wait=max_wait
         )
-        self.scheduler = MicrobatchScheduler(self.engine, max_batch=max_batch)
 
     # ---------------- write path ----------------
     def apply_updates(self, batch: EdgeBatch) -> BatchResult:
@@ -90,8 +133,8 @@ class LiveQueryService:
         return self.stream.apply_batch(batch)
 
     # ---------------- read path ----------------
-    def submit(self, query: Query) -> None:
-        self.scheduler.submit(query)
+    def submit(self, query: Query, *, urgent: bool = False) -> None:
+        self.scheduler.submit(query, urgent=urgent)
 
     def submit_many(self, queries: Sequence[Query]) -> None:
         self.scheduler.submit_many(queries)
@@ -110,9 +153,10 @@ class LiveQueryService:
 
     def verify(self) -> None:
         """Streaming state bit-exact vs recount AND zero stale cached
-        rows in the provider — the service-level freshness contract."""
+        rows on every runtime rank — the service-level freshness
+        contract."""
         self.stream.verify()
-        cached, stale = self.provider.audit_freshness()
+        cached, stale = self.runtime.audit_freshness()
         if stale:
             raise AssertionError(
                 f"provider staleness bound violated: {stale}/{cached} "

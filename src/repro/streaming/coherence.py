@@ -3,13 +3,17 @@
 The static pipeline's cache science (paper §II-F, §III-B) assumes a
 read-only graph: rows are fetched once and never change. Streaming breaks
 that — every applied edge mutates two adjacency rows — so this module
-extends both cache layers with coherence:
+extends both cache layers with coherence, running over the shared
+``ShardedRuntime`` (which owns the 1D partition and the p per-rank
+``ClampiCache`` instances — this layer constructs neither):
 
-1. ``ClampiCache`` replay: each batch's delta row-pair reads are replayed
-   through a CLaMPI simulator exactly like the static access stream
-   (``rma.simulate_rma_lcc``), but stale entries — cached rows of
-   vertices whose adjacency just changed — are *invalidated* first, so
-   hit/miss/eviction/invalidations statistics stay meaningful.
+1. Per-rank ClampiCache replay: each batch's delta row-pair reads are
+   replayed through the runtime's caches exactly like the static access
+   stream (owner(u) pulls row v through *its own rank's* cache), but
+   stale entries — cached rows of vertices whose adjacency just
+   changed — are *invalidated* first, fanned out by the runtime only to
+   the ranks that actually hold them, so hit/miss/eviction/invalidation
+   statistics stay meaningful.
 2. ``StaticDegreeCache`` rescoring: degree drift moves vertices in and
    out of the top-C residency set; ``refresh_static_degree_cache``
    invalidates stale resident rows and rebuilds the set when drift
@@ -27,13 +31,12 @@ from typing import Optional
 import numpy as np
 
 from ..core.cache import (
-    ClampiCache,
     NetworkModel,
     StaticDegreeCache,
     build_static_degree_cache,
     refresh_static_degree_cache,
 )
-from ..core.partition import partition_1d
+from ..core.runtime import ShardedRuntime
 
 __all__ = ["CoherenceReport", "StreamingCacheCoherence"]
 
@@ -65,12 +68,24 @@ class CoherenceReport:
         return (self.static_hits + self.clampi_hits) / r if r else 0.0
 
 
+class _RuntimeCacheView:
+    """Aggregated statistics view over the runtime's p caches (the
+    drop-in replacement for the old single shared simulator)."""
+
+    def __init__(self, runtime: ShardedRuntime):
+        self._runtime = runtime
+
+    @property
+    def stats(self):
+        return self._runtime.merged_cache_stats()
+
+
 class StreamingCacheCoherence:
     """Replays each batch's delta access stream through both cache layers.
 
-    ``p`` simulated ranks give the 1D-partition notion of *remote*: the
-    owner of u processes edge (u, v) and pulls row v iff owner(v) differs
-    and v is not static-cache resident.
+    The runtime's p ranks give the 1D-partition notion of *remote*: the
+    owner of u processes edge (u, v) and pulls row v through its own
+    rank's cache iff owner(v) differs and v is not static-cache resident.
     """
 
     def __init__(
@@ -84,26 +99,34 @@ class StreamingCacheCoherence:
         table_slots: Optional[int] = None,
         rebuild_fraction: float = 0.05,
         network: Optional[NetworkModel] = None,
+        runtime: Optional[ShardedRuntime] = None,
     ):
-        self.part = partition_1d(n, p)
-        self.p = p
-        self.net = network or NetworkModel()
+        if runtime is None:
+            runtime = ShardedRuntime(
+                n=n,
+                p=p,
+                cache_bytes=clampi_bytes,
+                table_slots=table_slots,
+                network=network,
+            )
+        assert runtime.caches is not None, (
+            "coherence replay needs a cached runtime"
+        )
+        self.runtime = runtime
+        self.part = runtime.part
+        self.p = runtime.p
+        self.net = runtime.net
         self.rebuild_fraction = rebuild_fraction
         self.static: StaticDegreeCache = build_static_degree_cache(
             np.asarray(degrees), cache_rows
         )
         self.cache_rows = cache_rows
-        self.clampi = ClampiCache(
-            clampi_bytes,
-            table_slots or max(1, n // 4),
-            mode="always",
-            network=self.net,
-        )
+        self.clampi = _RuntimeCacheView(runtime)
         self.report = CoherenceReport()
-        self.providers: list = []  # serving row providers to notify
+        self.providers: list = []  # serving listeners to notify
 
     def attach_provider(self, provider) -> None:
-        """Register a serving row provider (``CacheBackedRowProvider``)
+        """Register a serving listener (a provider or a whole runtime)
         whose cached payloads must be invalidated on every applied
         batch — the freshness contract of the query service."""
         self.providers.append(provider)
@@ -120,14 +143,15 @@ class StreamingCacheCoherence:
             return rep
         changed = np.unique(pairs.ravel())
 
-        # 1. coherence: cached copies of mutated rows are stale — both in
-        #    the replay simulator and in any attached serving provider.
-        self.clampi.invalidate_many(changed)
+        # 1. coherence: cached copies of mutated rows are stale — the
+        #    runtime fans the drop out only to the ranks that hold each
+        #    row, both for the replay caches and any attached listener.
+        self.runtime.invalidate(changed)
         for provider in self.providers:
             provider.notify_batch(changed)
 
         # 2. replay the delta access stream (both directions of each
-        #    edge: owner(u) pulls row v and owner(v) pulls row u).
+        #    edge: owner(u) pulls row v through rank owner(u)'s cache).
         deg = store.degrees
         a = np.concatenate([pairs[:, 0], pairs[:, 1]])
         b = np.concatenate([pairs[:, 1], pairs[:, 0]])
@@ -136,11 +160,13 @@ class StreamingCacheCoherence:
         remote = owners_a != owners_b
         rep.local_reads += int(np.count_nonzero(~remote))
         b_rem = b[remote]
+        k_rem = owners_a[remote]
         in_static = self.static.slot_of(b_rem) >= 0
         rep.static_hits += int(np.count_nonzero(in_static))
-        for v in b_rem[~in_static]:
+        caches = self.runtime.caches
+        for v, k in zip(b_rem[~in_static], k_rem[~in_static]):
             size = int(deg[int(v)]) * ID_BYTES
-            self.clampi.get(int(v), size, score=float(deg[int(v)]))
+            caches[int(k)].get(int(v), size, score=float(deg[int(v)]))
 
         # 3. rescore static residency against the drifted degrees.
         refresh = refresh_static_degree_cache(

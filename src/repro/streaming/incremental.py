@@ -33,6 +33,7 @@ from typing import Dict, Optional
 import numpy as np
 
 from ..core.csr import CSRGraph
+from ..core.runtime import ShardedRuntime
 from ..core.triangles import lcc_scores, triangles_per_vertex
 from ..kernels.delta_intersect import (
     delta_intersect_counts,
@@ -55,6 +56,9 @@ class BatchResult:
     n_dirty: int  # vertices whose T or LCC changed
     delta_pairs: int  # row pairs intersected (Pallas kernel or host path)
     compacted: bool
+    # True/False: the attached pull schedule was patched incrementally /
+    # rebuilt on width overflow; None: no schedule attached
+    schedule_incremental: Optional[bool] = None
 
 
 class StreamingLCCEngine:
@@ -64,6 +68,15 @@ class StreamingLCCEngine:
     ``t``/``lcc`` always equal ``triangles_per_vertex``/``lcc_scores`` of
     the compacted current graph (the streaming tests assert this after
     arbitrary update sequences).
+
+    With a ``ShardedRuntime`` attached (directly or via the coherence
+    layer), each batch's delta worklist is partitioned by the owner rank
+    of its first endpoint — the same ownership rule the static engine's
+    edge worklists follow — and the batched old∩old intersections run
+    through the ``delta_intersect`` path once per shard. The per-vertex
+    deltas are integer scatter-adds, so the sharded result is bit-exact
+    vs the unsharded one at any p. The runtime also carries the optional
+    static pull schedule, kept fresh per batch via ``maintain_schedule``.
     """
 
     def __init__(
@@ -76,6 +89,7 @@ class StreamingLCCEngine:
         auto_compact: bool = True,
         compact_threshold: float = 0.25,
         coherence=None,
+        runtime: Optional[ShardedRuntime] = None,
     ):
         self.store = DynamicCSR.from_csr(
             csr, compact_threshold=compact_threshold
@@ -87,6 +101,14 @@ class StreamingLCCEngine:
         self.interpret = interpret
         self.auto_compact = auto_compact
         self.coherence = coherence
+        if runtime is None and coherence is not None:
+            runtime = getattr(coherence, "runtime", None)
+        self.runtime = runtime
+        if runtime is not None:
+            runtime.bind_store(self.store)
+        self.shard_pairs = np.zeros(
+            runtime.p if runtime is not None else 1, np.int64
+        )  # row pairs processed per owner rank (worklist balance)
         self.n_batches = 0
         self.n_updates = 0  # effective (non-noop) undirected updates
         self.delta_pairs_total = 0
@@ -144,6 +166,9 @@ class StreamingLCCEngine:
         self.delta_pairs_total += delta_pairs
         if self.coherence is not None:
             self.coherence.on_batch(ins, dele, self.store)
+        schedule_incremental = None
+        if self.runtime is not None and self.runtime.problem is not None:
+            schedule_incremental = self.runtime.maintain_schedule(ins, dele)
         return BatchResult(
             n_inserted=int(ins.shape[0]),
             n_deleted=int(dele.shape[0]),
@@ -152,6 +177,7 @@ class StreamingLCCEngine:
             n_dirty=int(dirty.size),
             delta_pairs=delta_pairs,
             compacted=compacted,
+            schedule_incremental=schedule_incremental,
         )
 
     def verify(self) -> None:
@@ -178,18 +204,46 @@ class StreamingLCCEngine:
         inserting ``pairs``) into ``delta6``. Rows of ``self.store`` are
         the *old* neighborhoods (callers guarantee ``pairs`` are absent).
         Returns the number of row pairs sent through delta-intersect."""
-        store = self.store
-        sent = store.n
-        k = pairs.shape[0]
-        u, v = pairs[:, 0], pairs[:, 1]
-
-        # batch-internal adjacency N_D (sorted per vertex)
+        # batch-internal adjacency N_D (sorted per vertex) — built over
+        # the WHOLE batch: a shard's wedge-closure corrections must see
+        # batch edges owned by other ranks too.
         d_adj: Dict[int, np.ndarray] = {}
         for a, b in pairs:
             d_adj.setdefault(int(a), []).append(int(b))
             d_adj.setdefault(int(b), []).append(int(a))
         for x in d_adj:
             d_adj[x] = np.array(sorted(d_adj[x]), np.int64)
+
+        if self.runtime is not None and self.runtime.p > 1:
+            # shard the delta worklist by owner rank of the first
+            # endpoint; per-shard scatter-adds are integer, so the sum
+            # over shards is bit-exact vs the single-shard path.
+            owners = self.runtime.part.owner(pairs[:, 0])
+            total = 0
+            for rank in np.unique(owners):
+                shard = pairs[owners == rank]
+                total += self._delta6_for_shard(
+                    shard, d_adj, delta6, sign=sign
+                )
+                self.shard_pairs[int(rank)] += shard.shape[0]
+            return total
+        n = self._delta6_for_shard(pairs, d_adj, delta6, sign=sign)
+        self.shard_pairs[0] += n
+        return n
+
+    def _delta6_for_shard(
+        self,
+        pairs: np.ndarray,
+        d_adj: Dict[int, np.ndarray],
+        delta6: np.ndarray,
+        *,
+        sign: int,
+    ) -> int:
+        """One shard's worth of batched intersections (see caller)."""
+        store = self.store
+        sent = store.n
+        k = pairs.shape[0]
+        u, v = pairs[:, 0], pairs[:, 1]
 
         w_old = max(int(store.degrees[np.concatenate([u, v])].max()), 1)
         w_new = max(max(len(r) for r in d_adj.values()), 1)

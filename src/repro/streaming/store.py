@@ -45,6 +45,32 @@ def _in_sorted(sorted_arr: Optional[np.ndarray], values: np.ndarray) -> np.ndarr
     return sorted_arr[idx] == values
 
 
+def _ragged_membership(
+    flat: np.ndarray, lo: np.ndarray, hi: np.ndarray, vals: np.ndarray
+) -> np.ndarray:
+    """Membership of ``vals[i]`` in the sorted slice ``flat[lo[i]:hi[i]]``.
+
+    One lock-step vectorized binary search over all queries at once
+    (O(Q log max_row) numpy steps, no Python loop per row) — the ragged
+    row boundaries ride along as per-query [lo, hi) windows."""
+    if flat.size == 0:
+        return np.zeros(vals.shape, bool)
+    lo = np.asarray(lo, np.int64).copy()
+    hi0 = np.asarray(hi, np.int64)
+    hi = hi0.copy()
+    while True:
+        active = lo < hi
+        if not active.any():
+            break
+        mid = (lo + hi) >> 1
+        fv = flat[np.where(active, mid, 0)]
+        go_right = active & (fv < vals)
+        lo = np.where(go_right, mid + 1, lo)
+        hi = np.where(active & ~go_right, mid, hi)
+    found = lo < hi0  # insertion point inside the window
+    return found & (flat[np.where(found, lo, 0)] == vals)
+
+
 def _group_by_vertex(
     a: np.ndarray, b: np.ndarray
 ) -> Iterator[Tuple[int, np.ndarray, np.ndarray]]:
@@ -124,21 +150,43 @@ class DynamicCSR:
     def has_edges(self, u: np.ndarray, v: np.ndarray) -> np.ndarray:
         """Vectorized membership: is (u[i], v[i]) currently an edge?
 
-        Grouped by source vertex — one vectorized binary search against
-        each touched row's base/added/removed arrays."""
+        Fully vectorized — one lock-step binary search over the base CSR
+        (per-query [offset, offset+deg) windows) plus one over the
+        concatenated delta buffers of the touched rows; the only Python
+        iteration left is a dict lookup per distinct touched vertex."""
         u = np.asarray(u, np.int64).ravel()
         v = np.asarray(v, np.int64).ravel()
-        out = np.zeros(u.shape, bool)
         if u.size == 0:
-            return out
-        for ui, vs, pos in _group_by_vertex(u, v):
-            hit = _in_sorted(self._added.get(ui), vs)
-            in_base = _in_sorted(self.base.row(ui), vs)
-            rem = self._removed.get(ui)
-            if rem is not None and rem.size:
-                in_base &= ~_in_sorted(rem, vs)
-            out[pos] = hit | in_base
-        return out
+            return np.zeros(u.shape, bool)
+        base = self.base
+        in_base = _ragged_membership(
+            base.adjacencies, base.offsets[u], base.offsets[u + 1], v
+        )
+        if not self._added and not self._removed:
+            return in_base
+        uu, inv = np.unique(u, return_inverse=True)
+        in_add = self._delta_membership(self._added, uu, inv, v)
+        in_rem = self._delta_membership(self._removed, uu, inv, v)
+        return in_add | (in_base & ~in_rem)
+
+    def _delta_membership(
+        self, table: Dict[int, np.ndarray], uu, inv, v
+    ) -> np.ndarray:
+        """Membership of ``v[i]`` in ``table[u[i]]`` (u factored as
+        ``uu[inv]``): concatenate the touched rows' delta arrays once,
+        then one ragged binary search over all queries."""
+        arrs = [table.get(int(x)) for x in uu]
+        sizes = np.array(
+            [0 if a is None else a.size for a in arrs], np.int64
+        )
+        if not sizes.any():
+            return np.zeros(v.shape, bool)
+        offs = np.zeros(uu.size + 1, np.int64)
+        np.cumsum(sizes, out=offs[1:])
+        flat = np.concatenate(
+            [a for a in arrs if a is not None and a.size]
+        )
+        return _ragged_membership(flat, offs[:-1][inv], offs[1:][inv], v)
 
     # ---------------- mutation ----------------
     def insert_edges(self, pairs: np.ndarray) -> None:

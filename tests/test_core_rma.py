@@ -2,7 +2,13 @@ import numpy as np
 import pytest
 
 from repro.core.cache import build_static_degree_cache
-from repro.core.rma import build_sharded_problem, simulate_rma_lcc
+from repro.core.csr import from_edges
+from repro.core.rma import (
+    ScheduleWidthOverflow,
+    assert_problems_equal,
+    build_sharded_problem,
+    simulate_rma_lcc,
+)
 from repro.core.partition import partition_1d
 from conftest import random_graph, powerlaw_graph
 
@@ -110,3 +116,141 @@ def test_expected_remote_reads_formula():
     total_remote = st.remote_gets.sum()
     expect = csr.degrees.sum() * (p - 1) / p
     assert abs(total_remote - expect) / expect < 0.25
+
+
+# ---------------------------------------------------------------------------
+# incremental pull-schedule maintenance (apply_delta)
+# ---------------------------------------------------------------------------
+def _edge_set(csr):
+    src, dst = csr.edge_list()
+    keep = src < dst
+    return set(map(tuple, np.stack([src[keep], dst[keep]], 1).tolist()))
+
+
+def _random_effective_delta(rng, edges, n, n_ins, n_del):
+    """(ins, dele) honoring the streaming contract: inserts absent,
+    deletes present, canonical u < v."""
+    ins = []
+    while len(ins) < n_ins:
+        a, b = (int(x) for x in rng.integers(0, n, 2))
+        if a == b:
+            continue
+        e = (min(a, b), max(a, b))
+        if e not in edges and e not in ins:
+            ins.append(e)
+    pool = sorted(edges)
+    pick = rng.choice(len(pool), size=min(n_del, len(pool)), replace=False)
+    dele = [pool[i] for i in pick]
+    return np.array(ins, np.int64), np.array(dele, np.int64)
+
+
+@pytest.mark.parametrize("seed,p,cache_rows,dedup", [
+    (0, 1, 0, True), (1, 4, 0, True), (2, 4, 12, True),
+    (3, 8, 8, True), (4, 3, 6, False),
+])
+def test_apply_delta_matches_scratch_build(seed, p, cache_rows, dedup):
+    """Property: after ANY sequence of effective insert/delete batches,
+    the patched problem is field-for-field bit-exact vs a from-scratch
+    build of the mutated graph — serve lists, edge worklists, padded
+    rows — and resolving the patched schedule yields the exact new
+    per-vertex triangle counts."""
+    rng = np.random.default_rng(seed)
+    n = 90 + 12 * seed
+    csr = powerlaw_graph(n, 5, seed=seed)
+    cache = (
+        build_static_degree_cache(csr.degrees, cache_rows)
+        if cache_rows
+        else None
+    )
+    width = csr.max_degree + 8  # headroom for inserts
+    prob = build_sharded_problem(
+        csr, p, n_rounds=3, cache=cache, width=width, dedup_rounds=dedup
+    )
+    edges = _edge_set(csr)
+    for _ in range(3):
+        ins, dele = _random_effective_delta(rng, edges, n, 10, 6)
+        edges.difference_update(map(tuple, dele.tolist()))
+        edges.update(map(tuple, ins.tolist()))
+        prob.apply_delta(ins, dele)
+        csr2 = from_edges(np.array(sorted(edges), np.int64), n)
+        fresh = build_sharded_problem(
+            csr2, p, n_rounds=3, cache=cache, width=width,
+            dedup_rounds=dedup,
+        )
+        assert_problems_equal(prob, fresh)
+    # the maintained schedule still resolves to exact triangle counts
+    from repro.core.triangles import triangles_per_vertex
+
+    csr2 = from_edges(np.array(sorted(edges), np.int64), n)
+    want_t = triangles_per_vertex(csr2)
+    part = partition_1d(n, p)
+    for k in range(p):
+        counts = resolve_rows(prob, k)
+        s = np.zeros(prob.n_loc + 1, np.int64)
+        np.add.at(s, prob.edge_u[k],
+                  np.where(prob.edge_mask[k], np.maximum(counts, 0), 0))
+        lo, hi = part.lo(k), part.hi(k)
+        assert np.array_equal(s[: hi - lo] // 2, want_t[lo:hi])
+
+
+def test_apply_delta_width_overflow_raises_before_mutating():
+    csr = powerlaw_graph(60, 6, seed=9)
+    prob = build_sharded_problem(csr, 4, n_rounds=2)  # width == max degree
+    hub = int(np.argmax(csr.degrees))
+    absent = next(
+        (hub, v) if hub < v else (v, hub)
+        for v in range(csr.n)
+        if v != hub and v not in set(csr.row(hub).tolist())
+    )
+    snap = {f: getattr(prob, f).copy()
+            for f in ("rows_ext", "degrees", "edge_u", "edge_vc",
+                      "serve_idx")}
+    with pytest.raises(ScheduleWidthOverflow):
+        prob.apply_delta(np.array([absent], np.int64),
+                         np.zeros((0, 2), np.int64))
+    for f, v in snap.items():  # overflow must leave the problem untouched
+        assert np.array_equal(getattr(prob, f), v), f
+
+
+def test_apply_delta_empty_batch_is_noop():
+    csr = powerlaw_graph(40, 4, seed=3)
+    prob = build_sharded_problem(csr, 2, n_rounds=2)
+    before = prob.edge_vc.copy()
+    prob.apply_delta(np.zeros((0, 2), np.int64), np.zeros((0, 2), np.int64))
+    assert np.array_equal(prob.edge_vc, before)
+
+
+def test_apply_delta_invalid_batch_leaves_problem_untouched():
+    """A contract-violating batch (double-applied delta) must raise and
+    leave every field bit-identical — a failed patch is retryable."""
+    csr = powerlaw_graph(50, 5, seed=11)
+    prob = build_sharded_problem(csr, 4, n_rounds=2,
+                                 width=csr.max_degree + 4)
+    edges = _edge_set(csr)
+    rng = np.random.default_rng(12)
+    ins, dele = _random_effective_delta(rng, edges, csr.n, 6, 4)
+    prob.apply_delta(ins, dele)
+    snap = {f: getattr(prob, f).copy()
+            for f in ("rows_ext", "degrees", "edge_u", "edge_vc",
+                      "edge_mask", "serve_idx")}
+    works_snap = [(u.copy(), v.copy()) for u, v in prob.works]
+    with pytest.raises(ValueError):
+        prob.apply_delta(ins, dele)  # inserts now present: breach
+    with pytest.raises(ValueError):
+        prob.apply_delta(np.zeros((0, 2), np.int64), dele)  # already gone
+    for f, v in snap.items():
+        assert np.array_equal(getattr(prob, f), v), f
+    for (u0, v0), (u1, v1) in zip(works_snap, prob.works):
+        assert np.array_equal(u0, u1) and np.array_equal(v0, v1)
+    # and the problem is still maintainable afterwards
+    edges.difference_update(map(tuple, dele.tolist()))
+    edges.update(map(tuple, ins.tolist()))
+    ins2, dele2 = _random_effective_delta(rng, edges, csr.n, 5, 3)
+    edges.difference_update(map(tuple, dele2.tolist()))
+    edges.update(map(tuple, ins2.tolist()))
+    prob.apply_delta(ins2, dele2)
+    fresh = build_sharded_problem(
+        from_edges(np.array(sorted(edges), np.int64), csr.n), 4,
+        n_rounds=2, width=prob.width,
+    )
+    assert_problems_equal(prob, fresh)

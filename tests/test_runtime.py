@@ -1,0 +1,166 @@
+"""ShardedRuntime contracts: ownership, rank-indexed transport, targeted
+coherence fanout, freshness audit, and incremental schedule upkeep —
+the substrate every consumer (epoch engine, streaming, serving) shares.
+"""
+import numpy as np
+
+from conftest import powerlaw_graph
+
+from repro.core.rma import build_sharded_problem
+from repro.core.runtime import ShardedRuntime
+from repro.streaming import DynamicCSR
+
+
+def _runtime(n_vertices=80, p=4, seed=0, **kw):
+    csr = powerlaw_graph(n_vertices, 5, seed=seed)
+    store = DynamicCSR.from_csr(csr)
+    return ShardedRuntime(store, p, **kw), store
+
+
+# ---------------------------------------------------------------------------
+# transport
+# ---------------------------------------------------------------------------
+def test_fetch_rows_local_free_remote_cached():
+    rt, store = _runtime()
+    lo, hi = rt.part.lo(1), rt.part.hi(1)
+    local_v = lo  # owned by rank 1
+    remote_v = 0  # owned by rank 0
+    rows = rt.fetch_rows(1, [local_v, remote_v, remote_v])
+    assert np.array_equal(rows[local_v], store.row(local_v))
+    assert np.array_equal(rows[remote_v], store.row(remote_v))
+    st = rt.stats[1]
+    assert st.local_reads == 1
+    assert st.remote_reads == 2
+    assert st.cache_hits == 1  # second read of the remote row hit
+    assert st.cache_misses == 1
+    # the miss shipped one row owner(remote_v)=0 -> requester 1
+    assert rt.serve_rows[0, 1] == 1
+    # other ranks untouched
+    assert rt.stats[0].remote_reads == 0
+
+
+def test_serve_matrix_tracks_all_to_all():
+    rt, store = _runtime(p=4)
+    n = store.n
+    for rank in range(4):
+        rt.fetch_rows(rank, range(n))  # every rank reads every row once
+    sr = rt.serve_rows
+    assert np.array_equal(np.diag(sr), np.zeros(4, np.int64))
+    block = rt.part
+    for q in range(4):
+        owned = block.hi(q) - block.lo(q)
+        for k in range(4):
+            if q != k:
+                assert sr[q, k] == owned  # each row shipped exactly once
+
+
+# ---------------------------------------------------------------------------
+# targeted coherence fanout
+# ---------------------------------------------------------------------------
+def test_invalidation_fans_out_only_to_caching_ranks():
+    rt, store = _runtime(p=4)
+    v = 0  # owned by rank 0
+    rt.fetch_rows(1, [v])  # only rank 1 caches it
+    rt.fetch_rows(2, [rt.part.lo(2)])  # rank 2 reads a local row: no cache
+    dropped = rt.invalidate([v])
+    assert dropped == 1
+    assert rt.stats[1].invalidations == 1
+    assert all(rt.stats[k].invalidations == 0 for k in (0, 2, 3))
+    # broadcast would have sent p messages for the one id; we sent 1
+    assert rt.invalidations_sent == 1
+    assert rt.invalidations_broadcast_equiv == 4
+    assert rt.invalidation_fanout_saved == 3
+
+
+def test_audit_flags_stale_then_invalidate_heals():
+    rt, store = _runtime(p=4)
+    hub = int(np.argmax(store.degrees))
+    rank = (int(rt.part.owner(hub)) + 1) % 4  # a rank where hub is remote
+    rt.fetch_rows(rank, [hub])
+    assert rt.caches[rank].contains(hub)
+    # mutate the hub's row behind the runtime's back
+    absent = next(
+        v for v in range(store.n)
+        if v != hub and not store.has_edge(hub, v)
+    )
+    store.insert_edges(np.array([[min(hub, absent), max(hub, absent)]]))
+    cached, stale = rt.audit_freshness()
+    assert stale == 1
+    rt.invalidate([hub, absent])
+    assert rt.audit_freshness()[1] == 0
+    rows = rt.fetch_rows(rank, [hub])  # refetch sees the fresh row
+    assert np.array_equal(rows[hub], store.row(hub))
+
+
+def test_uncached_runtime_is_always_fresh():
+    rt, store = _runtime(p=2, uncached=True)
+    rt.fetch_rows(1, [0, 0])
+    assert rt.stats[1].cache_misses == 2  # every remote read pays
+    assert rt.invalidate([0]) == 0
+    assert rt.audit_freshness() == (0, 0)
+
+
+# ---------------------------------------------------------------------------
+# schedule upkeep
+# ---------------------------------------------------------------------------
+def test_maintain_schedule_incremental_then_overflow_rebuild():
+    csr = powerlaw_graph(60, 4, seed=3)
+    store = DynamicCSR.from_csr(csr)
+    rt = ShardedRuntime(store, 4)
+    rt.attach_problem(
+        build_sharded_problem(csr, 4, width=csr.max_degree + 2)
+    )
+    hub = int(np.argmax(csr.degrees))
+    absent = [v for v in range(csr.n)
+              if v != hub and not store.has_edge(hub, v)]
+
+    def edge(v):
+        return [min(hub, v), max(hub, v)]
+
+    z = np.zeros((0, 2), np.int64)
+    ins = np.array([edge(absent[0])], np.int64)
+    store.insert_edges(ins)
+    assert rt.maintain_schedule(ins, z) is True  # fits: incremental
+    assert rt.schedule_deltas == 1 and rt.schedule_rebuilds == 0
+    ins = np.array([edge(absent[1]), edge(absent[2])], np.int64)
+    store.insert_edges(ins)
+    assert rt.maintain_schedule(ins, z) is False  # width overflow
+    assert rt.schedule_rebuilds == 1
+    assert rt.problem.width >= store.max_degree  # rebuilt with headroom
+    # the rebuilt problem reflects the post-batch graph
+    d_hub = int(store.degree(hub))
+    k, lu = int(rt.part.owner(hub)), hub - rt.part.lo(int(rt.part.owner(hub)))
+    assert rt.problem.degrees[k, lu] == d_hub
+
+
+def test_replay_admitted_entries_serve_fresh_rows_on_shared_runtime():
+    """StreamingCacheCoherence drives the same per-rank caches via
+    get() without capturing payloads; a provider hit on such an entry
+    must serve (and capture) the authoritative row, not crash."""
+    from repro.streaming import EdgeBatch, StreamingCacheCoherence
+    from repro.streaming.incremental import StreamingLCCEngine
+
+    csr = powerlaw_graph(64, 5, seed=30)
+    coh = StreamingCacheCoherence(
+        csr.n, csr.degrees, p=4, cache_rows=4, clampi_bytes=1 << 16
+    )
+    eng = StreamingLCCEngine(csr, use_kernel=False, coherence=coh)
+    rt = eng.runtime
+    rng = np.random.default_rng(31)
+    e = rng.integers(0, csr.n, size=(40, 2))
+    eng.apply_batch(EdgeBatch.inserts(e[e[:, 0] != e[:, 1]]))
+    # find a replay-admitted resident with no captured payload
+    found = None
+    for k, cache in enumerate(rt.caches):
+        for key in cache.entries:
+            if key not in rt._payloads[k]:
+                found = (k, int(key))
+                break
+        if found:
+            break
+    assert found is not None, "replay should admit payload-less entries"
+    k, v = found
+    rows = rt.fetch_rows(k, [v])  # hit path: heal, don't KeyError
+    assert np.array_equal(rows[v], eng.store.row(v))
+    assert rt.stats[k].cache_hits >= 1
+    assert rt.audit_rank(k)[1] == 0  # captured payload is fresh

@@ -298,3 +298,156 @@ def test_workload_generators_deterministic_and_skewed():
                      QueryKind.COMMON_NEIGHBORS, QueryKind.TOP_K_LCC}
     with pytest.raises(ValueError):
         sample_vertices(deg, 5, rng, kind="nope")
+
+
+# ---------------------------------------------------------------------------
+# cross-rank serving over the shared runtime
+# ---------------------------------------------------------------------------
+def test_cross_rank_service_bit_exact_under_updates():
+    """p provider/engine instances over one runtime: every query routed
+    to its owner rank, answers bit-exact, freshness bound on all ranks."""
+    csr = powerlaw_graph(96, 5, seed=21)
+    svc = LiveQueryService(csr, p=4, cross_rank=True, max_batch=16)
+    assert len(svc.providers) == 4
+    rng = np.random.default_rng(22)
+    for i in range(5):
+        e = rng.integers(0, csr.n, size=(24, 2))
+        op = np.where(rng.random(24) < 0.3, -1, 1).astype(np.int8)
+        svc.apply_updates(EdgeBatch(u=e[:, 0], v=e[:, 1], op=op))
+        res = svc.scheduler.run(
+            make_queries(svc.store.degrees, 40, kind="zipf", seed=30 + i)
+        )
+        _check_results(res, svc.store.to_csr())
+    svc.verify()  # exactness + zero stale rows on ANY rank
+    # work actually spread across ranks, and rows crossed ranks
+    active = [k for k, st in enumerate(svc.runtime.stats)
+              if st.local_reads + st.remote_reads > 0]
+    assert len(active) >= 2
+    assert svc.runtime.cross_rank_rows_served() > 0
+    # targeted coherence beat the broadcast fanout
+    assert svc.runtime.invalidation_fanout_saved > 0
+
+
+def test_cross_rank_routes_to_owner():
+    from repro.core.runtime import ShardedRuntime
+    from repro.serving import ShardedQueryEngine
+
+    csr = powerlaw_graph(64, 4, seed=23)
+    store = DynamicCSR.from_csr(csr)
+    rt = ShardedRuntime(store, p=4)
+    eng = ShardedQueryEngine(store, rt, use_kernel=False)
+    for v in (0, 17, 40, 63):
+        assert eng.route(Query.lcc(v)) == int(rt.part.owner(v))
+    assert eng.route(Query.top_k_lcc(3)) == 0
+    # endpoint reads of a routed query are LOCAL at the owner rank
+    res = eng.execute_batch([Query.triangles(v) for v in range(64)])
+    _check_results(res, csr)
+    for k, st in enumerate(rt.stats):
+        assert st.local_reads > 0  # each rank served its own block
+
+
+def test_cross_rank_and_single_rank_answers_agree():
+    csr = powerlaw_graph(80, 5, seed=24)
+    qs = make_queries(csr.degrees, 60, kind="zipf", seed=25)
+    outs = []
+    for cross in (False, True):
+        svc = LiveQueryService(csr, p=4, cross_rank=cross, max_batch=16)
+        outs.append(svc.scheduler.run(qs))
+    for a, b in zip(*outs):
+        assert a.query == b.query and a.value == b.value
+
+
+# ---------------------------------------------------------------------------
+# deadline-aware batching (poll) alongside the FIFO drain (flush)
+# ---------------------------------------------------------------------------
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_scheduler_deadline_flush():
+    csr = powerlaw_graph(40, 4, seed=26)
+    store = DynamicCSR.from_csr(csr)
+    eng = QueryEngine(store, use_kernel=False)
+    clk = _FakeClock()
+    sched = MicrobatchScheduler(eng, max_batch=8, max_wait=0.5, clock=clk)
+    sched.submit(Query.triangles(3))
+    assert sched.poll() == []  # deadline not reached: keep coalescing
+    clk.t = 0.4
+    sched.submit(Query.lcc(5))
+    assert sched.poll() == []
+    clk.t = 0.6  # oldest has now waited 0.6 >= 0.5
+    res = sched.poll()
+    assert [r.query.u for r in res] == [3, 5]
+    assert sched.pending == 0 and sched.n_deadline_flushes == 1
+    # latency measured from the injected clock, per query
+    assert res[0].latency_s == pytest.approx(0.6)
+    assert res[1].latency_s == pytest.approx(0.2)
+    _check_results(res, csr)
+
+
+def test_scheduler_full_window_and_priority_flush():
+    csr = powerlaw_graph(40, 4, seed=27)
+    store = DynamicCSR.from_csr(csr)
+    eng = QueryEngine(store, use_kernel=False)
+    clk = _FakeClock()
+    sched = MicrobatchScheduler(eng, max_batch=4, max_wait=10.0, clock=clk)
+    # full window dispatches immediately, leftover keeps waiting
+    for v in range(5):
+        sched.submit(Query.triangles(v))
+    res = sched.poll()
+    assert len(res) == 4 and sched.pending == 1
+    # urgent query flushes the partial window ahead of the deadline,
+    # batching the query that was already queued in front of it
+    sched.submit(Query.lcc(7), urgent=True)
+    res = sched.poll()
+    assert [r.query.u for r in res] == [4, 7]
+    assert sched.n_priority_flushes == 1
+    assert sched.poll() == []  # drained
+    # flush() still drains everything regardless of deadlines
+    sched.submit(Query.triangles(9))
+    assert len(sched.flush()) == 1
+
+
+def test_scheduler_poll_matches_flush_answers():
+    csr = powerlaw_graph(50, 4, seed=28)
+    store = DynamicCSR.from_csr(csr)
+    qs = make_queries(csr.degrees, 30, kind="zipf", seed=29)
+    r_flush = MicrobatchScheduler(
+        QueryEngine(store, use_kernel=False), max_batch=8
+    ).run(qs)
+    clk = _FakeClock()
+    sched = MicrobatchScheduler(
+        QueryEngine(store, use_kernel=False), max_batch=8, max_wait=0.1,
+        clock=clk,
+    )
+    sched.submit_many(qs)
+    clk.t = 1.0
+    r_poll = sched.poll()
+    for a, b in zip(r_flush, r_poll):
+        assert a.query == b.query and a.value == b.value
+
+
+def test_service_shares_coherence_runtime():
+    """Passing a StreamingCacheCoherence must yield ONE runtime for
+    replay and serving (no parallel partition/cache stacks), with
+    serving reads hitting rows the replay already warmed."""
+    csr = powerlaw_graph(64, 4, seed=31)
+    coh = StreamingCacheCoherence(
+        csr.n, csr.degrees, p=4, cache_rows=8, clampi_bytes=1 << 16
+    )
+    svc = LiveQueryService(csr, p=4, coherence=coh, max_batch=16)
+    assert svc.runtime is coh.runtime
+    assert svc.stream.runtime is coh.runtime
+    rng = np.random.default_rng(32)
+    for i in range(3):
+        e = rng.integers(0, csr.n, size=(20, 2))
+        svc.apply_updates(EdgeBatch.inserts(e[e[:, 0] != e[:, 1]]))
+        res = svc.scheduler.run(
+            make_queries(svc.store.degrees, 24, kind="zipf", seed=40 + i)
+        )
+        _check_results(res, svc.store.to_csr())
+    svc.verify()

@@ -305,3 +305,87 @@ def test_coherence_replay_counts():
     assert 0.0 <= rep.hit_rate <= 1.0
     assert rep.invalidations <= coh.clampi.stats.misses  # only cached rows
     eng.verify()  # coherence layer must not perturb exactness
+
+
+# ---------------------------------------------------------------------------
+# sharded streaming over the runtime
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("p", [1, 4])
+def test_sharded_engine_bit_exact(p):
+    """Worklist sharding by owner rank must not change a single bit of
+    T or LCC at any p (integer scatter-adds commute across shards)."""
+    from repro.core.runtime import ShardedRuntime
+
+    rng = np.random.default_rng(17)
+    n = 64
+    base = powerlaw_graph(n, 5, seed=17)
+    ref = StreamingLCCEngine(base, interpret=True)  # unsharded reference
+    eng = StreamingLCCEngine(
+        base,
+        interpret=True,
+        runtime=ShardedRuntime(n=n, p=p, uncached=True),
+    )
+    for _ in range(6):
+        b = _random_batch(rng, n, 40, p_delete=0.3)
+        ref.apply_batch(b)
+        eng.apply_batch(b)
+        assert np.array_equal(eng.t, ref.t)
+        assert np.array_equal(eng.lcc, ref.lcc)
+        eng.verify()
+    if p > 1:
+        # the worklist really was split across ranks
+        assert np.count_nonzero(eng.shard_pairs) > 1
+    assert eng.shard_pairs.sum() == eng.delta_pairs_total
+
+
+def test_engine_adopts_coherence_runtime():
+    """Passing a StreamingCacheCoherence wires the engine onto the SAME
+    runtime (one partition, one set of caches — no duplicate wiring)."""
+    n = 48
+    coh = StreamingCacheCoherence(
+        n, np.zeros(n, np.int64), p=4, cache_rows=8, clampi_bytes=1 << 12
+    )
+    eng = StreamingLCCEngine.empty(n, interpret=True, coherence=coh)
+    assert eng.runtime is coh.runtime
+    assert eng.runtime.store is eng.store  # bound on attach
+    rng = np.random.default_rng(5)
+    for _ in range(3):
+        eng.apply_batch(_random_batch(rng, n, 32))
+    eng.verify()
+    assert eng.shard_pairs.sum() == eng.delta_pairs_total
+
+
+# ---------------------------------------------------------------------------
+# adversarial hub-targeted churn
+# ---------------------------------------------------------------------------
+def test_adversarial_churn_stresses_drift_rebuilds():
+    """Hub-targeted deletes are the worst case for degree-scored
+    residency: they must (a) keep the engine exact, (b) force top-C
+    membership drift rebuilds, and (c) actually hit hubs (deleted
+    endpoints skew far above the mean degree)."""
+    from repro.graphs.rmat import rmat_adversarial_stream
+
+    scale, ef = 8, 4
+    n = 1 << scale
+    coh = StreamingCacheCoherence(
+        n, np.zeros(n, np.int64), p=4, cache_rows=16,
+        clampi_bytes=1 << 14, rebuild_fraction=0.05,
+    )
+    eng = StreamingLCCEngine.empty(n, interpret=True, coherence=coh)
+    del_deg = []
+    for batch in rmat_adversarial_stream(
+        scale, ef, batch_size=256, delete_frac=0.3, seed=2
+    ):
+        dels = batch.op == -1
+        if dels.any():
+            deg = eng.store.degrees
+            del_deg.append(float(np.mean(
+                deg[np.concatenate([batch.u[dels], batch.v[dels]])]
+            )))
+        eng.apply_batch(batch)
+    eng.verify()  # exactness survives the adversarial stream
+    rep = coh.report
+    assert rep.static_rebuilds > 0, "hub churn must force residency rebuilds"
+    assert rep.static_stale_rows > 0  # resident rows were mutated in place
+    mean_deg = float(eng.store.degrees.mean())
+    assert np.mean(del_deg) > 2 * mean_deg, "deletes must target hubs"
