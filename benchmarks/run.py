@@ -24,6 +24,7 @@ def main(argv=None):
 
     from benchmarks import (
         bench_cache_size,
+        bench_device_tier,
         bench_intersection,
         bench_reuse,
         bench_roofline,
@@ -44,6 +45,7 @@ def main(argv=None):
         "strong_scaling_fig9_10": lambda: bench_strong_scaling.run(quick),
         "streaming_updates": lambda: bench_streaming.run(quick),
         "serving_queries": lambda: bench_serving.run(quick),
+        "device_tier": lambda: bench_device_tier.run(quick),
         "schedule_rebuild": lambda: bench_schedule_rebuild.run(quick),
         "roofline": lambda: bench_roofline.run(),
     }
@@ -133,6 +135,23 @@ def checklist(results):
             f"{sr['schedule_incremental_speedup']}x faster than "
             f"from-scratch rebuild at 1% deltas (target >= 5x, bit-exact)",
             sr["schedule_incremental_speedup"] >= 5.0 and sr["bit_exact"],
+        ))
+    dt = results.get("device_tier", {})
+    if "serving_materialization_reduction" in dt:
+        checks.append((
+            f"device tier: cuts serving host-row materialization "
+            f"{dt['serving_materialization_reduction']:.0%} on Zipf "
+            f"(device hit rate {dt['device_hit_rate_zipf']:.0%}), "
+            f"answers bit-exact at p in {{1,4}}",
+            dt["serving_materialization_reduction"] > 0
+            and dt["device_hit_rate_zipf"] > 0.2,
+        ))
+    if "streaming_materialization_reduction" in dt:
+        checks.append((
+            f"device tier: cuts streaming oo materialization "
+            f"{dt['streaming_materialization_reduction']:.0%} with a "
+            f"quarter-size hot set, checkpoints bit-exact at p in {{1,4}}",
+            dt["streaming_materialization_reduction"] > 0.3,
         ))
     sv = results.get("serving_queries", {})
     if "microbatch_speedup_zipf" in sv:

@@ -99,7 +99,13 @@ class ShardedLCCProblem:
     # ------------------------------------------------------------------
     # Incremental schedule maintenance.
     # ------------------------------------------------------------------
-    def apply_delta(self, ins: np.ndarray, dele: np.ndarray) -> "ShardedLCCProblem":
+    def apply_delta(
+        self,
+        ins: np.ndarray,
+        dele: np.ndarray,
+        *,
+        new_cache_ids: Optional[np.ndarray] = None,
+    ) -> "ShardedLCCProblem":
         """Patch the compiled problem for one applied update batch.
 
         ``ins``/``dele`` are canonical ``[K, 2]`` edge arrays with the
@@ -110,19 +116,32 @@ class ShardedLCCProblem:
         1. rewrites the padded rows + degrees of the touched vertices
            (and their replicated cache-row copies) — O(delta) rows,
         2. splices the touched edges in/out of each rank's worklist —
-           one vectorized merge per rank, and
+           one vectorized merge per rank, and — when ``new_cache_ids``
+           carries a drifted static residency set — swaps
+           ``cache_ids``/``cache_rows`` in place (the replicated rows
+           are gathered from the already-patched ``rows_ext``, so no
+           graph pass is needed), then
         3. recompiles the pull schedule (round request lists, serve
            lists, combined indices) from the patched worklists with the
            vectorized compiler — bit-exact vs the per-edge reference in
            ``build_sharded_problem``.
 
-        Raises ``ScheduleWidthOverflow`` (leaving the problem untouched)
-        when a touched vertex outgrows the padded width; callers rebuild
-        with a larger width. Mutates and returns ``self``.
+        Residency drift therefore never forces a from-scratch rebuild;
+        only a width overflow does. Raises ``ScheduleWidthOverflow``
+        (leaving the problem untouched) when a touched vertex outgrows
+        the padded width; callers rebuild with a larger width. Mutates
+        and returns ``self``.
         """
         ins = np.asarray(ins, np.int64).reshape(-1, 2)
         dele = np.asarray(dele, np.int64).reshape(-1, 2)
-        if ins.shape[0] == 0 and dele.shape[0] == 0:
+        fresh_ids: Optional[np.ndarray] = None
+        if new_cache_ids is not None:
+            fresh_ids = np.sort(
+                np.unique(np.asarray(new_cache_ids, np.int64).ravel())
+            )
+            if np.array_equal(fresh_ids, self.cache_ids):
+                fresh_ids = None
+        if ins.shape[0] == 0 and dele.shape[0] == 0 and fresh_ids is None:
             return self
         if self.works is None:
             raise ValueError(
@@ -241,6 +260,21 @@ class ShardedLCCProblem:
                 u_l = np.insert(u_l, pos, s_loc.astype(u_l.dtype))
                 v_g = np.insert(v_g, pos, d_glb.astype(v_g.dtype))
             self.works[k] = (u_l, v_g)
+
+        # 2b. residency drift: install the rescored static set in place.
+        #     Replicated cache rows are gathers of already-patched local
+        #     rows (widths fit by construction), so this costs O(C W).
+        if fresh_ids is not None:
+            if fresh_ids.size:
+                owners = part.owner(fresh_ids).astype(np.int64)
+                lo_of = np.array(
+                    [part.lo(k) for k in range(self.p)], np.int64
+                )
+                lus = fresh_ids - lo_of[owners]
+                self.cache_rows = self.rows_ext[owners, lus].copy()
+            else:
+                self.cache_rows = np.zeros((0, w), np.int32)
+            self.cache_ids = fresh_ids
 
         # 3. recompile the schedule from the patched worklists
         (

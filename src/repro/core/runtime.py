@@ -62,6 +62,8 @@ class ProviderStats:
     remote_reads: int = 0  # reads of non-local rows (pre-cache)
     cache_hits: int = 0
     cache_misses: int = 0
+    device_hits: int = 0  # served by the device-resident tier (pre-host)
+    device_bytes_saved: int = 0  # host materialization/upload avoided
     invalidations: int = 0
     stale_payloads_dropped: int = 0
     bytes_fetched: int = 0  # remote bytes actually moved (post-cache)
@@ -89,6 +91,8 @@ class ShardedRuntime:
         network: Optional[NetworkModel] = None,
         use_degree_score: bool = True,
         uncached: bool = False,
+        device_slots: int = 0,
+        device_width: Optional[int] = None,
     ):
         if store is not None:
             n = int(store.n)
@@ -133,6 +137,19 @@ class ShardedRuntime:
         self.problem = None
         self.schedule_rebuilds = 0
         self.schedule_deltas = 0
+        self.schedule_residency_refreshes = 0
+        # optional device-resident hot-row tier, below the host caches
+        # (content identical across ranks by construction — one manager
+        # models the per-device replicated buffer; per-rank hit counts
+        # live in ProviderStats).
+        self.device = None
+        self._device_slots = int(device_slots)
+        self._device_width = device_width
+        # one-shot set of ids whose device rows a producer has already
+        # patched this batch (consumed by the next invalidate)
+        self._device_fresh_once = None
+        if self._device_slots and self.store is not None:
+            self.enable_device_tier(self._device_slots, self._device_width)
 
     # ---------------- wiring ----------------
     def bind_store(self, store) -> None:
@@ -152,6 +169,23 @@ class ShardedRuntime:
                 if cache.entries:
                     cache.flush()
                 self._payloads[k].clear()
+        if self._device_slots and (swapped or self.device is None):
+            self.enable_device_tier(self._device_slots, self._device_width)
+
+    def enable_device_tier(self, slots: int, max_width: Optional[int] = None):
+        """Build (or rebuild, against the current store) the device-
+        resident hot-row tier: ``slots`` degree-scored rows padded to
+        ``max_width``, consulted by ``fetch_rows`` before the host cache
+        and kept coherent by ``invalidate``."""
+        from ..device import ResidencyManager
+
+        assert self.store is not None, "bind a store first"
+        self.device = ResidencyManager(
+            self.store, slots=slots, max_width=max_width
+        )
+        self._device_slots = int(slots)
+        self._device_width = max_width
+        return self.device
 
     def build_static_cache(self, capacity_rows: int) -> StaticDegreeCache:
         """Install a shared top-C degree-scored resident set."""
@@ -181,19 +215,28 @@ class ShardedRuntime:
         st = self.stats[rank]
         out: Dict[int, np.ndarray] = {}
         store = self.store
+        dev = self.device
         if self.caches is None:
             for v in vertices:
                 v = int(v)
-                row = store.row(v)
                 if int(self.part.owner(v)) == rank:
                     st.local_reads += 1
-                else:
-                    st.remote_reads += 1
-                    st.cache_misses += 1
-                    size = row.size * ID_BYTES
-                    st.bytes_fetched += size
-                    st.modeled_comm_s += self.net.remote(size)
-                    self.serve_rows[int(self.part.owner(v)), rank] += 1
+                    out[v] = store.row(v)
+                    continue
+                st.remote_reads += 1
+                if dev is not None:
+                    row = dev.serve(v)
+                    if row is not None:
+                        st.device_hits += 1
+                        st.device_bytes_saved += row.size * ID_BYTES
+                        out[v] = row
+                        continue
+                row = store.row(v)
+                st.cache_misses += 1
+                size = row.size * ID_BYTES
+                st.bytes_fetched += size
+                st.modeled_comm_s += self.net.remote(size)
+                self.serve_rows[int(self.part.owner(v)), rank] += 1
                 out[v] = row
             return out
         cache = self.caches[rank]
@@ -206,6 +249,16 @@ class ShardedRuntime:
                 out[v] = store.row(v)
                 continue
             st.remote_reads += 1
+            # the device tier sits below the host cache (closer to the
+            # compute): a resident row is already on device, so the read
+            # neither probes the host cache nor moves modeled bytes.
+            if dev is not None:
+                row = dev.serve(v)
+                if row is not None:
+                    st.device_hits += 1
+                    st.device_bytes_saved += row.size * ID_BYTES
+                    out[v] = row
+                    continue
             d = int(deg[v])
             size = d * ID_BYTES
             score = float(d) if self.use_degree_score else None
@@ -240,10 +293,23 @@ class ShardedRuntime:
     def invalidate(self, changed_ids: Iterable[int]) -> int:
         """One applied update batch mutated ``changed_ids``' rows: drop
         their cached payloads on exactly the ranks that hold them.
-        Returns the number of entries dropped."""
+        Returns the number of host-cache entries dropped."""
+        changed = [int(v) for v in changed_ids]
+        # both tiers observe every mutation: the device tier patches the
+        # touched resident rows in place (or evicts on width overflow)
+        # and re-scores admission, so a later resident hit is fresh.
+        # Rows a producer already synced mid-batch (mark_device_fresh)
+        # are skipped once — they were patched against the same final
+        # state, so a second merge+upload would only burn time and
+        # double-count the patch/upload ledger.
+        if self.device is not None:
+            fresh = self._device_fresh_once or ()
+            dev_ids = [v for v in changed if v not in fresh]
+            if dev_ids:
+                self.device.notify_batch(dev_ids)
+        self._device_fresh_once = None
         if self.caches is None:
             return 0
-        changed = [int(v) for v in changed_ids]
         dropped = 0
         self.invalidations_broadcast_equiv += self.p * len(changed)
         for k, cache in enumerate(self.caches):
@@ -265,6 +331,13 @@ class ShardedRuntime:
     # every registered listener; the runtime is such a listener.
     def notify_batch(self, changed_ids: Iterable[int]) -> None:
         self.invalidate(changed_ids)
+
+    def mark_device_fresh(self, ids: Iterable[int]) -> None:
+        """Declare that the device rows of ``ids`` already reflect the
+        batch's final state (a producer patched them mid-batch); the
+        NEXT ``invalidate`` skips them on the device tier only — host
+        payload caches are always invalidated."""
+        self._device_fresh_once = {int(v) for v in ids}
 
     def _prune_evicted(self, rank: int) -> None:
         """Payloads of entries the cache evicted on its own are dead
@@ -291,11 +364,15 @@ class ShardedRuntime:
         return len(payloads), stale
 
     def audit_freshness(self) -> Tuple[int, int]:
-        """(cached, stale) summed over every rank — the freshness bound
-        holds iff stale == 0 everywhere."""
+        """(cached, stale) summed over every rank and the device tier —
+        the freshness bound holds iff stale == 0 everywhere."""
         cached = stale = 0
         for k in range(self.p):
             c, s = self.audit_rank(k)
+            cached += c
+            stale += s
+        if self.device is not None:
+            c, s = self.device.audit()
             cached += c
             stale += s
         return cached, stale
@@ -330,6 +407,7 @@ class ShardedRuntime:
         dele: np.ndarray,
         *,
         rebuild_width: Optional[int] = None,
+        new_cache_ids: Optional[np.ndarray] = None,
     ) -> bool:
         """Patch the attached schedule for one applied update batch.
 
@@ -340,14 +418,25 @@ class ShardedRuntime:
         keeping the problem's build parameters (requested rounds, cache
         residency, dedup) and doubling the width for headroom unless
         ``rebuild_width`` overrides it. Returns True if the incremental
-        path succeeded, False if the fallback rebuild ran."""
+        path succeeded, False if the fallback rebuild ran.
+
+        ``new_cache_ids`` is the drifted static residency set (e.g. the
+        coherence layer's rescored top-C): ``apply_delta`` refreshes
+        ``cache_ids``/``cache_rows`` in place and recompiles, so
+        residency drift alone never forces a from-scratch rebuild —
+        only width overflow does."""
         from .rma import ScheduleWidthOverflow, build_sharded_problem
 
         if self.problem is None:
             return True
+        had_ids = self.problem.cache_ids.copy()
         try:
-            self.problem.apply_delta(ins, dele)
+            self.problem.apply_delta(ins, dele, new_cache_ids=new_cache_ids)
             self.schedule_deltas += 1
+            if new_cache_ids is not None and not np.array_equal(
+                had_ids, self.problem.cache_ids
+            ):
+                self.schedule_residency_refreshes += 1
             return True
         except ScheduleWidthOverflow:
             prob = self.problem
@@ -358,10 +447,13 @@ class ShardedRuntime:
             )
             if rebuild_width is None:
                 rebuild_width = max(2 * int(csr.max_degree), 2 * prob.width, 1)
+            ids = (
+                np.sort(np.unique(np.asarray(new_cache_ids, np.int64)))
+                if new_cache_ids is not None
+                else prob.cache_ids
+            )
             cache = (
-                StaticDegreeCache(vertex_ids=prob.cache_ids)
-                if prob.cache_ids.size
-                else None
+                StaticDegreeCache(vertex_ids=ids) if ids.size else None
             )
             self.problem = build_sharded_problem(
                 csr,

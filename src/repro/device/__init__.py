@@ -1,0 +1,41 @@
+"""Device-resident hot-row cache tier — the memory hierarchy, mapped.
+
+The paper's caching story is one level of the hierarchy: remote rows
+are expensive, so each rank keeps a CLaMPI cache of the hottest remote
+adjacency rows, with **degree centrality as the application-defined
+score** (§III-B2) and score-driven **eviction** of the weakest entry.
+This package applies the same reuse argument one level further down —
+host memory vs device (TPU) memory — giving each rank a two-tier stack:
+
+===================  ==============================  =====================
+paper / host tier    concept                          device tier (here)
+===================  ==============================  =====================
+``ClampiCache``      bounded cache of hot rows        ``ResidencyManager``
+CLaMPI score         degree centrality picks          same degree score
+(§III-B2)            what is worth keeping            picks the hot set
+eviction             weakest-score victim when full   strict score-driven
+                                                      evict/admit on drift
+RMA get on miss      remote fetch into the cache      host row merge + pack
+                                                      + upload into a slot
+invalidation         drop mutated rows so a hit is    in-place row patch
+(streaming)          never stale                      (small deltas) or
+                                                      evict; epoch-bumped
+                                                      slots make a stale
+                                                      hit impossible
+hit                  payload served from the cache    kernels gather the
+                                                      row from the resident
+                                                      ``[slots, max_width]``
+                                                      buffer — zero upload
+===================  ==============================  =====================
+
+``ShardedRuntime.fetch_rows`` consults the residency tier *before* the
+host cache (it is closer to compute); ``invalidate`` fans out to both
+tiers. The compute path is ``kernels.resident_intersect`` — scalar-
+prefetch gather fused with the width-bucketed pairwise intersect — used
+by both consumers: serving routes resident-vertex pairs through it, and
+streaming runs its old∩old delta intersections against resident hub
+rows without re-materializing them on host each batch.
+"""
+from .residency import ResidencyManager, ResidencyStats  # noqa: F401
+
+__all__ = ["ResidencyManager", "ResidencyStats"]

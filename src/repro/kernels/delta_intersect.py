@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .bucketing import pow2_ceil
 from .intersect_count import intersect_count as _intersect
 
 __all__ = ["delta_intersect_counts", "delta_intersect_masks"]
@@ -54,7 +55,7 @@ def delta_intersect_counts(
         return np.zeros((0,), np.int64)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    be = min(block_e, max(8, 1 << int(np.ceil(np.log2(e)))))
+    be = min(block_e, pow2_ceil(e, 8))
     e_pad = -(-e // be) * be
     cnt = _intersect(
         jnp.asarray(_pad_pairs(rows_a, e_pad, sentinel)),

@@ -20,36 +20,14 @@ ids < sentinel (padding slots never match).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 import numpy as np
 
+from .bucketing import iter_width_buckets, pack_rows
 from .delta_intersect import delta_intersect_counts, delta_intersect_masks
 
 __all__ = ["batched_pair_counts"]
-
-
-def _width_classes(widths: Sequence[int]) -> np.ndarray:
-    """Power-of-2 ceiling per width, min 1 (vectorized)."""
-    w = np.maximum(np.asarray(widths, np.int64), 1)
-    exp = np.ceil(np.log2(w)).astype(np.int64)
-    return (np.int64(1) << exp).astype(np.int64)
-
-
-def _pack(rows: Sequence[np.ndarray], width: int, sentinel: int) -> np.ndarray:
-    """Scatter ragged rows into a padded [E, width] matrix (vectorized)."""
-    out = np.full((len(rows), width), sentinel, np.int32)
-    if not rows:
-        return out
-    lens = np.fromiter((r.size for r in rows), np.int64, len(rows))
-    total = int(lens.sum())
-    if total == 0:
-        return out
-    flat = np.concatenate(rows)
-    ei = np.repeat(np.arange(len(rows), dtype=np.int64), lens)
-    starts = np.repeat(np.cumsum(lens) - lens, lens)
-    out[ei, np.arange(total, dtype=np.int64) - starts] = flat
-    return out
 
 
 def batched_pair_counts(
@@ -70,14 +48,11 @@ def batched_pair_counts(
     out = np.zeros(n_pairs, np.int64)
     if n_pairs == 0:
         return out
-    wa_cls = _width_classes([r.size for r in rows_a])
-    wb_cls = _width_classes([r.size for r in rows_b])
-    key = wa_cls << 32 | wb_cls
-    for k in np.unique(key):
-        idxs = np.flatnonzero(key == k)
-        wa, wb = int(k >> 32), int(k & 0xFFFFFFFF)
-        a = _pack([rows_a[i] for i in idxs], wa, sentinel)
-        b = _pack([rows_b[i] for i in idxs], wb, sentinel)
+    for idxs, wa, wb in iter_width_buckets(
+        [r.size for r in rows_a], [r.size for r in rows_b]
+    ):
+        a = pack_rows([rows_a[i] for i in idxs], wa, sentinel)
+        b = pack_rows([rows_b[i] for i in idxs], wb, sentinel)
         if use_kernel:
             cnt = delta_intersect_counts(
                 a, b, sentinel=sentinel, block_e=block_e, interpret=interpret

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 
 __all__ = [
     "intersect_count_ref",
+    "resident_intersect_ref",
     "bitmap_intersect_count_ref",
     "embedding_bag_ref",
     "segment_sum_sorted_ref",
@@ -17,6 +18,15 @@ def intersect_count_ref(rows_a, rows_b, *, sentinel: int):
     eq = rows_a[:, :, None] == rows_b[:, None, :]
     eq = eq & (rows_a[:, :, None] < sentinel)
     return eq.sum(axis=(1, 2)).astype(jnp.int32)
+
+
+def resident_intersect_ref(residency, slots_a, rows_b=None, *,
+                           slots_b=None, sentinel: int):
+    """Oracle for ``resident_intersect``: gather the resident rows, then
+    the plain pairwise intersect. ``rows_b`` XOR ``slots_b``."""
+    a = jnp.take(residency, slots_a, axis=0)
+    b = rows_b if slots_b is None else jnp.take(residency, slots_b, axis=0)
+    return intersect_count_ref(a, b, sentinel=sentinel)
 
 
 def bitmap_intersect_count_ref(words_a, words_b):

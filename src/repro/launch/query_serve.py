@@ -55,6 +55,24 @@ def main(argv=None):
     ap.add_argument("--max-wait-ms", type=float, default=None,
                     help="deadline-aware batching: flush a partial window "
                          "once its oldest query waited this long")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="admission control: bound the pending queue; "
+                         "submits past the bound are shed with reason "
+                         "'depth' (see the shed-rate counter)")
+    ap.add_argument("--shed-wait-ms", type=float, default=None,
+                    help="load shedding: poll() drops queries that "
+                         "already waited this long instead of serving "
+                         "them (reason 'deadline')")
+    ap.add_argument("--device-tier", action="store_true",
+                    help="enable the device-resident hot-row cache tier "
+                         "(persistent TPU residency for hub adjacency; "
+                         "resident pairs intersect via the "
+                         "resident_intersect gather kernel)")
+    ap.add_argument("--device-slots", type=int, default=256,
+                    help="hot-set capacity (rows) of the device tier")
+    ap.add_argument("--device-width", type=int, default=None,
+                    help="padded row width of the device buffer "
+                         "(default: pow2 ceiling of the max degree)")
     ap.add_argument("--cache-kib", type=int, default=1024)
     ap.add_argument("--uncached", action="store_true",
                     help="DirectRowProvider baseline instead of the cache")
@@ -66,6 +84,10 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if not 0.0 <= args.write_frac <= 0.9:
         ap.error("--write-frac must be in [0, 0.9] (queries must flow)")
+    if args.uncached and args.device_tier:
+        ap.error("--uncached is the no-cache baseline; a device tier on "
+                 "top of it would serve remote reads from residency and "
+                 "corrupt the comparison")
     if args.smoke:
         args.scale = min(args.scale, 8)
         args.queries = min(args.queries, 256)
@@ -91,6 +113,11 @@ def main(argv=None):
         max_batch=args.batch_window,
         max_wait=(args.max_wait_ms * 1e-3
                   if args.max_wait_ms is not None else None),
+        max_queue=args.max_queue,
+        shed_wait=(args.shed_wait_ms * 1e-3
+                   if args.shed_wait_ms is not None else None),
+        device_slots=args.device_slots if args.device_tier else 0,
+        device_width=args.device_width,
         uncached=args.uncached,
     )
 
@@ -183,6 +210,21 @@ def main(argv=None):
               f"{rt.invalidation_fanout_saved} msgs vs broadcast")
     print(f"pair dedup: {svc.engine.n_pairs_raw} raw -> "
           f"{svc.engine.n_pairs_total} intersected")
+    if args.max_queue is not None or args.shed_wait_ms is not None:
+        sch = svc.scheduler
+        print(f"admission: queue bound {args.max_queue}, shed "
+              f"{sch.n_shed_depth} depth + {sch.n_shed_deadline} deadline "
+              f"(shed rate {lat.shed_rate:.1%})")
+    if args.device_tier:
+        dev = svc.runtime.device
+        ds = dev.stats
+        print(f"device tier[{dev.resident_rows}/{dev.slots} slots x "
+              f"width {dev.max_width}]: {svc.engine.n_pairs_resident} "
+              f"resident pairs, hit rate {ds.hit_rate:.1%}, "
+              f"{ds.bytes_saved} B host materialization saved "
+              f"({svc.engine.host_pack_bytes} B still packed), "
+              f"{ds.patches} patches / {ds.admits} admits / "
+              f"{ds.evicts} evicts, {ds.upload_bytes} B uploaded")
     if args.verify:
         svc.verify()
         print(f"verified: {n_verified} point queries bit-exact vs recount, "

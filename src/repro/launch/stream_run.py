@@ -57,7 +57,17 @@ def main(argv=None):
     ap.add_argument("--clampi-kib", type=int, default=1024)
     ap.add_argument("--maintain-schedule", action="store_true",
                     help="keep a compiled pull schedule fresh incrementally "
-                         "(verified vs a from-scratch build per checkpoint)")
+                         "(verified vs a from-scratch build per checkpoint); "
+                         "carries the coherence layer's static residency, "
+                         "refreshed in place when it drifts")
+    ap.add_argument("--device-tier", action="store_true",
+                    help="device-resident hot-row tier: oo delta "
+                         "intersections run against persistently resident "
+                         "hub rows (resident_intersect gather kernel)")
+    ap.add_argument("--device-slots", type=int, default=256,
+                    help="hot-set capacity (rows) of the device tier")
+    ap.add_argument("--device-width", type=int, default=None,
+                    help="padded row width of the device buffer")
     ap.add_argument("--checkpoint-every", type=int, default=1,
                     help="verify vs from-scratch recount every k batches "
                          "(<= 0: only the final verification)")
@@ -95,18 +105,39 @@ def main(argv=None):
         coherence=coh,
     )
     runtime = eng.runtime
+    if args.device_tier:
+        # the stream starts from an empty graph, so the width cannot be
+        # inferred from current degrees; 256 covers R-MAT hubs at the
+        # launcher's scales (wider rows simply stay host-side).
+        runtime.enable_device_tier(
+            args.device_slots,
+            args.device_width if args.device_width is not None else 256,
+        )
     if args.maintain_schedule:
+        # compile the schedule WITH the coherence layer's static
+        # residency: when churn drifts the top-C, maintain_schedule
+        # refreshes cache_ids in place instead of rebuilding.
         runtime.attach_problem(
-            build_sharded_problem(eng.store.to_csr(), ranks, width=64)
+            build_sharded_problem(
+                eng.store.to_csr(), ranks, width=64, cache=coh.static
+            )
         )
 
     def check_schedule():
+        from repro.core.cache import StaticDegreeCache
+
         snap = eng.store.to_csr()
         prob = runtime.problem
+        cache = (
+            StaticDegreeCache(vertex_ids=prob.cache_ids.copy())
+            if prob.cache_ids.size
+            else None
+        )
         fresh = build_sharded_problem(
             snap,
             ranks,
             n_rounds=prob.n_rounds_requested,
+            cache=cache,
             width=prob.width,
             dedup_rounds=prob.dedup_rounds,
         )
@@ -168,9 +199,20 @@ def main(argv=None):
           f"modeled comm {coh.total_comm_time * 1e3:.2f} ms")
     if args.maintain_schedule:
         print(f"schedule: {runtime.schedule_deltas} incremental deltas, "
-              f"{runtime.schedule_rebuilds} width-overflow rebuilds "
-              f"(width {runtime.problem.width}, e_max "
+              f"{runtime.schedule_rebuilds} width-overflow rebuilds, "
+              f"{runtime.schedule_residency_refreshes} in-place residency "
+              f"refreshes (width {runtime.problem.width}, e_max "
               f"{runtime.problem.e_max}, s_max {runtime.problem.s_max})")
+    if args.device_tier:
+        dev = runtime.device
+        ds = dev.stats
+        print(f"device tier[{dev.resident_rows}/{dev.slots} slots x "
+              f"width {dev.max_width}]: {eng.oo_resident_pairs} oo pairs "
+              f"on-device, hit rate {ds.hit_rate:.1%}, "
+              f"{ds.bytes_saved} B host materialization saved "
+              f"({eng.oo_host_bytes} B still built), "
+              f"{ds.patches} patches / {ds.admits} admits / "
+              f"{ds.evicts} evicts, {ds.upload_bytes} B uploaded")
     if not args.no_verify:
         if not verified_last:  # last batch's checkpoint already recounted
             eng.verify()

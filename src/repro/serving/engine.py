@@ -33,7 +33,10 @@ import numpy as np
 
 from ..core.runtime import ShardedRuntime
 from ..core.triangles import lcc_scores, triangles_per_vertex
+from ..kernels.bucketing import pack_rows, width_classes
+from ..kernels.delta_intersect import delta_intersect_masks
 from ..kernels.point_query import batched_pair_counts
+from ..kernels.resident_intersect import resident_intersect_counts
 from .provider import DirectRowProvider, RuntimeRowProvider
 from .requests import Query, QueryKind, QueryResult
 
@@ -66,6 +69,8 @@ class QueryEngine:
         self.n_queries = 0
         self.n_pairs_total = 0  # row pairs after batch-wide dedup
         self.n_pairs_raw = 0  # row pairs before dedup
+        self.n_pairs_resident = 0  # pairs served via the device tier
+        self.host_pack_bytes = 0  # row bytes packed host-side per call
 
     # ---------------- point/batch execution ----------------
     def execute_batch(self, queries: Sequence[Query]) -> List[QueryResult]:
@@ -97,14 +102,7 @@ class QueryEngine:
         uniq, inv = np.unique(key, return_inverse=True)
         u_lo = uniq // self.store.n
         u_hi = uniq % self.store.n
-        counts = batched_pair_counts(
-            [rows[int(x)] for x in u_lo],
-            [rows[int(x)] for x in u_hi],
-            sentinel=self.store.n,
-            use_kernel=self.use_kernel,
-            block_e=self.block_e,
-            interpret=self.interpret,
-        )[inv]
+        counts = self._pair_counts(u_lo, u_hi, rows)[inv]
         self.n_pairs_total += int(uniq.size)
         self.n_pairs_raw += int(key.size)
 
@@ -148,10 +146,21 @@ class QueryEngine:
         return out
 
     # ---------------- internals ----------------
+    @property
+    def residency(self):
+        """Device-resident tier behind this engine's provider (or None)."""
+        return getattr(self.provider, "residency", None)
+
     def _fetch_rows_for(
         self, tri: Sequence[Query], cn: Sequence[Query]
     ) -> Dict[int, np.ndarray]:
-        """Two-phase dedup'd row fetch: endpoints, then their neighbors."""
+        """Two-phase dedup'd row fetch: endpoints, then their neighbors.
+
+        Neighbors resident in the device tier are NOT fetched: their
+        rows stay on device and the pair intersection gathers them from
+        the residency buffer — the host-row-materialization saving the
+        tier exists for. (Endpoints are always fetched: the engine
+        needs their rows to enumerate pairs and for degrees/ids.)"""
         endpoints = [q.u for q in tri]
         for q in cn:
             endpoints.extend((q.u, q.v))
@@ -165,9 +174,102 @@ class QueryEngine:
                 np.concatenate([rows[q.u] for q in tri]).astype(np.int64)
             )
             need2 = nbrs[~np.isin(nbrs, need, assume_unique=False)]
+            dev = self.residency
+            if dev is not None and need2.size:
+                need2 = need2[dev.slot_of(need2) < 0]
             if need2.size:
                 rows.update(self.provider.fetch_rows(need2))
         return rows
+
+    def _pair_counts(
+        self, u_lo: np.ndarray, u_hi: np.ndarray, rows: Dict[int, np.ndarray]
+    ) -> np.ndarray:
+        """Counts per unique pair, routed by residency: a pair whose
+        row was left on device (not in ``rows``) goes through the
+        ``resident_intersect`` gather; fully-materialized pairs take
+        the classic width-bucketed host path."""
+        sent = self.store.n
+        dev = self.residency
+        if dev is None:
+            out = batched_pair_counts(
+                [rows[int(x)] for x in u_lo],
+                [rows[int(x)] for x in u_hi],
+                sentinel=sent,
+                use_kernel=self.use_kernel,
+                block_e=self.block_e,
+                interpret=self.interpret,
+            )
+            self.host_pack_bytes += 4 * int(
+                sum(rows[int(x)].size for x in u_lo)
+                + sum(rows[int(x)].size for x in u_hi)
+            )
+            return out
+        n_pairs = u_lo.size
+        lo_in = np.fromiter((int(x) in rows for x in u_lo), bool, n_pairs)
+        hi_in = np.fromiter((int(x) in rows for x in u_hi), bool, n_pairs)
+        assert bool(np.all(lo_in | hi_in)), (
+            "every pair has at least one fetched endpoint"
+        )
+        out = np.zeros(n_pairs, np.int64)
+        host = lo_in & hi_in
+        if host.any():
+            idx = np.flatnonzero(host)
+            ra = [rows[int(u_lo[i])] for i in idx]
+            rb = [rows[int(u_hi[i])] for i in idx]
+            out[idx] = batched_pair_counts(
+                ra, rb, sentinel=sent, use_kernel=self.use_kernel,
+                block_e=self.block_e, interpret=self.interpret,
+            )
+            self.host_pack_bytes += 4 * int(
+                sum(r.size for r in ra) + sum(r.size for r in rb)
+            )
+        # ~hi_in and ~lo_in are disjoint (the assert above): exactly one
+        # side of a routed pair stayed on device.
+        for res_idx, res_v, mat_v in (
+            (np.flatnonzero(~hi_in), u_hi, u_lo),
+            (np.flatnonzero(~lo_in), u_lo, u_hi),
+        ):
+            if res_idx.size == 0:
+                continue
+            out[res_idx] = self._resident_counts(
+                dev,
+                res_v[res_idx],
+                [rows[int(x)] for x in mat_v[res_idx]],
+                sentinel=sent,
+            )
+            self.n_pairs_resident += int(res_idx.size)
+        return out
+
+    def _resident_counts(
+        self,
+        dev,
+        resident_v: np.ndarray,
+        rows_other: List[np.ndarray],
+        *,
+        sentinel: int,
+    ) -> np.ndarray:
+        """|row(resident_v[i]) ∩ rows_other[i]| with the resident side
+        gathered from the device buffer (kernel path) or its host
+        mirror (host path) — never re-materialized from the store."""
+        slots, epochs = dev.claim(resident_v)
+        assert bool(np.all(slots >= 0)), "routing bug: non-resident pair"
+        dev.check(slots, epochs)  # stale handles are impossible by design
+        out = np.zeros(len(rows_other), np.int64)
+        self.host_pack_bytes += 4 * int(sum(r.size for r in rows_other))
+        widths = width_classes([r.size for r in rows_other])
+        for w in np.unique(widths):
+            idx = np.flatnonzero(widths == w)
+            packed = pack_rows([rows_other[i] for i in idx], int(w), sentinel)
+            if self.use_kernel:
+                out[idx] = resident_intersect_counts(
+                    dev.rows, slots[idx], packed,
+                    sentinel=sentinel, interpret=self.interpret,
+                )
+            else:
+                out[idx] = delta_intersect_masks(
+                    packed, dev.host_rows(slots[idx]), sentinel=sentinel
+                ).sum(1)
+        return out
 
     def _top_k(self, q: Query) -> QueryResult:
         lcc = self._current_lcc()
@@ -266,3 +368,11 @@ class ShardedQueryEngine:
     @property
     def n_pairs_raw(self) -> int:
         return sum(e.n_pairs_raw for e in self.engines)
+
+    @property
+    def n_pairs_resident(self) -> int:
+        return sum(e.n_pairs_resident for e in self.engines)
+
+    @property
+    def host_pack_bytes(self) -> int:
+        return sum(e.host_pack_bytes for e in self.engines)

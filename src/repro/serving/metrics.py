@@ -1,12 +1,17 @@
-"""Latency/throughput accounting for the query service.
+"""Latency/throughput/shed accounting for the query service.
 
 Percentiles use the 'lower' interpolation so a reported p99 is an
 actually-observed latency, not an average of two observations.
+
+Shed accounting backs the admission-control policy: a bounded queue
+rejects work it cannot serve in time instead of letting every queued
+query's latency collapse. ``shed_rate`` = shed / (served + shed) — the
+fraction of offered load turned away, by reason.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import Dict, List
 
 import numpy as np
 
@@ -22,6 +27,8 @@ class LatencySummary:
     p90_ms: float
     p99_ms: float
     max_ms: float
+    shed: int = 0
+    shed_rate: float = 0.0
 
     def as_dict(self) -> dict:
         return {
@@ -34,6 +41,7 @@ class LatencyRecorder:
     def __init__(self):
         self._lat: List[float] = []
         self.wall_s = 0.0
+        self.sheds: Dict[str, int] = {}  # reason -> queries rejected
 
     def record(self, latency_s: float) -> None:
         self._lat.append(float(latency_s))
@@ -41,14 +49,25 @@ class LatencyRecorder:
     def record_wall(self, seconds: float) -> None:
         self.wall_s += float(seconds)
 
+    def record_shed(self, reason: str, n: int = 1) -> None:
+        self.sheds[reason] = self.sheds.get(reason, 0) + int(n)
+
     @property
     def count(self) -> int:
         return len(self._lat)
 
+    @property
+    def n_shed(self) -> int:
+        return sum(self.sheds.values())
+
     def summary(self) -> LatencySummary:
         lat = np.asarray(self._lat, np.float64)
+        shed = self.n_shed
+        rate = shed / (lat.size + shed) if (lat.size + shed) else 0.0
         if lat.size == 0:
-            return LatencySummary(0, self.wall_s, 0.0, 0.0, 0.0, 0.0, 0.0)
+            return LatencySummary(
+                0, self.wall_s, 0.0, 0.0, 0.0, 0.0, 0.0, shed, rate
+            )
         p50, p90, p99 = np.percentile(
             lat, [50, 90, 99], method="lower"
         )
@@ -60,4 +79,6 @@ class LatencyRecorder:
             p90_ms=float(p90) * 1e3,
             p99_ms=float(p99) * 1e3,
             max_ms=float(lat.max()) * 1e3,
+            shed=shed,
+            shed_rate=rate,
         )

@@ -77,6 +77,13 @@ class RuntimeRowProvider:
     def stats(self) -> ProviderStats:
         return self.runtime.stats[self.rank]
 
+    @property
+    def residency(self):
+        """The runtime's device-resident hot-row tier (None when the
+        tier is off) — the engine routes resident-vertex pairs through
+        the ``resident_intersect`` kernel against it."""
+        return self.runtime.device
+
     # ---------------- reads ----------------
     def fetch_rows(self, vertices: Sequence[int]) -> Dict[int, np.ndarray]:
         """Sorted adjacency row per distinct vertex (callers dedup)."""

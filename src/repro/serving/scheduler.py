@@ -25,6 +25,18 @@ Two drain policies coexist:
   batching whatever happens to be queued in front of it). Otherwise
   ``poll`` returns nothing and requests keep coalescing.
 
+**Admission control / load shedding** — an overloaded open-loop service
+must reject work it cannot serve in time, or every queued query's
+latency collapses together:
+
+- ``max_queue`` bounds the pending depth: a submit past it is rejected
+  immediately (``submit`` returns False, reason ``"depth"``);
+- ``shed_wait`` bounds staleness at dispatch: ``poll()`` drops pending
+  queries that have already waited past it (reason ``"deadline"``)
+  instead of serving answers nobody is waiting for anymore.
+
+Both feed the ``shed``/``shed_rate`` counters in the latency summary.
+
 ``max_batch=1`` degenerates to one-query-at-a-time serving — the
 baseline the serving benchmark compares against. The clock is
 injectable so deadline behavior is testable without sleeping.
@@ -48,13 +60,27 @@ class MicrobatchScheduler:
         *,
         max_batch: int = 64,
         max_wait: Optional[float] = None,
+        max_queue: Optional[int] = None,
+        shed_wait: Optional[float] = None,
         clock: Optional[Callable[[], float]] = None,
     ):
         assert max_batch >= 1
         assert max_wait is None or max_wait >= 0.0
+        assert max_queue is None or max_queue >= 1
+        assert shed_wait is None or shed_wait >= 0.0
+        if shed_wait is not None and max_wait is not None:
+            # strict: _shed_stale runs before the due check with >=
+            # comparisons, so equality would shed exactly the queries
+            # the deadline flush exists to serve
+            assert shed_wait > max_wait, (
+                "shed_wait must exceed max_wait, or queries the "
+                "deadline drain promises to serve get shed instead"
+            )
         self.engine = engine
         self.max_batch = int(max_batch)
         self.max_wait = max_wait
+        self.max_queue = None if max_queue is None else int(max_queue)
+        self.shed_wait = shed_wait
         self._clock = clock or time.perf_counter
         self._pending: List[tuple] = []  # (query, t_submit, urgent)
         self._n_urgent = 0
@@ -62,16 +88,38 @@ class MicrobatchScheduler:
         self.n_batches = 0
         self.n_deadline_flushes = 0
         self.n_priority_flushes = 0
+        self.n_shed_depth = 0
+        self.n_shed_deadline = 0
 
     # ---------------- request path ----------------
-    def submit(self, query: Query, *, urgent: bool = False) -> None:
+    def submit(self, query: Query, *, urgent: bool = False) -> bool:
+        """Queue one query. Returns False (and records a shed with
+        reason ``"depth"``) when the bounded queue is full — the
+        caller's signal to back off or retry elsewhere."""
+        if self.max_queue is not None and len(self._pending) >= self.max_queue:
+            self.n_shed_depth += 1
+            self.recorder.record_shed("depth")
+            return False
         self._pending.append((query, self._clock(), bool(urgent)))
         if urgent:
             self._n_urgent += 1
+        return True
 
-    def submit_many(self, queries: Sequence[Query]) -> None:
+    def submit_many(self, queries: Sequence[Query]) -> int:
+        """Queue many; returns how many were admitted (the rest shed)."""
         t = self._clock()
-        self._pending.extend((q, t, False) for q in queries)
+        admitted = 0
+        for q in queries:
+            if (
+                self.max_queue is not None
+                and len(self._pending) >= self.max_queue
+            ):
+                self.n_shed_depth += 1
+                self.recorder.record_shed("depth")
+                continue
+            self._pending.append((q, t, False))
+            admitted += 1
+        return admitted
 
     @property
     def pending(self) -> int:
@@ -114,13 +162,35 @@ class MicrobatchScheduler:
             out.extend(self._drain_window())
         return out
 
+    def _shed_stale(self, now: float) -> None:
+        """Drop pending queries that already waited past ``shed_wait``
+        — serving them would return answers nobody is waiting for,
+        while holding up the queries behind them."""
+        if self.shed_wait is None or not self._pending:
+            return
+        keep: List[tuple] = []
+        for item in self._pending:
+            if now - item[1] >= self.shed_wait:
+                self.n_shed_deadline += 1
+                self.recorder.record_shed("deadline")
+                if item[2]:
+                    self._n_urgent -= 1
+            else:
+                keep.append(item)
+        if len(keep) != len(self._pending):
+            self._pending = keep
+
     def poll(self) -> List[QueryResult]:
-        """Deadline-aware drain: dispatch windows only while one is due
-        (full / urgent pending / oldest past ``max_wait``); otherwise
-        return nothing and let requests keep coalescing."""
+        """Deadline-aware drain with load shedding: dispatch windows
+        only while one is due (full / urgent pending / oldest past
+        ``max_wait``); queries already stale past ``shed_wait`` are
+        rejected-with-reason instead of served; otherwise return
+        nothing and let requests keep coalescing."""
         out: List[QueryResult] = []
         while True:
-            reason = self._due(self._clock())
+            now = self._clock()
+            self._shed_stale(now)
+            reason = self._due(now)
             if reason is None:
                 return out
             if reason == "deadline":

@@ -52,6 +52,10 @@ class LiveQueryService:
         cache_bytes: int = 1 << 20,
         max_batch: int = 64,
         max_wait: Optional[float] = None,
+        max_queue: Optional[int] = None,
+        shed_wait: Optional[float] = None,
+        device_slots: int = 0,
+        device_width: Optional[int] = None,
         use_kernel: Optional[bool] = None,
         interpret: Optional[bool] = None,
         coherence: Optional[StreamingCacheCoherence] = None,
@@ -83,6 +87,12 @@ class LiveQueryService:
             self.runtime = ShardedRuntime(
                 self.store, p, cache_bytes=cache_bytes, uncached=uncached
             )
+        if device_slots:
+            # the device-resident hot-row tier below the host caches:
+            # fetch_rows consults it first, the engines route resident
+            # pairs through the resident_intersect gather, and the
+            # coherence fanout below keeps it fresh per update batch.
+            self.runtime.enable_device_tier(device_slots, device_width)
         lcc_source = lambda: self.stream.lcc  # noqa: E731
         if cross_rank:
             assert provider is None, "cross_rank builds its own rank views"
@@ -122,7 +132,11 @@ class LiveQueryService:
             hook.attach_provider(self.runtime)
         self.coherence = coherence
         self.scheduler = MicrobatchScheduler(
-            self.engine, max_batch=max_batch, max_wait=max_wait
+            self.engine,
+            max_batch=max_batch,
+            max_wait=max_wait,
+            max_queue=max_queue,
+            shed_wait=shed_wait,
         )
 
     # ---------------- write path ----------------
@@ -133,11 +147,13 @@ class LiveQueryService:
         return self.stream.apply_batch(batch)
 
     # ---------------- read path ----------------
-    def submit(self, query: Query, *, urgent: bool = False) -> None:
-        self.scheduler.submit(query, urgent=urgent)
+    def submit(self, query: Query, *, urgent: bool = False) -> bool:
+        """False when admission control shed the query (queue full)."""
+        return self.scheduler.submit(query, urgent=urgent)
 
-    def submit_many(self, queries: Sequence[Query]) -> None:
-        self.scheduler.submit_many(queries)
+    def submit_many(self, queries: Sequence[Query]) -> int:
+        """Number of queries admitted (the rest were shed)."""
+        return self.scheduler.submit_many(queries)
 
     def flush(self) -> List[QueryResult]:
         return self.scheduler.flush()

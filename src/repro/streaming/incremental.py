@@ -39,6 +39,7 @@ from ..kernels.delta_intersect import (
     delta_intersect_counts,
     delta_intersect_masks,
 )
+from ..kernels.resident_intersect import resident_intersect_counts
 from .store import DynamicCSR
 from .updates import EdgeBatch, normalize_batch
 
@@ -112,6 +113,13 @@ class StreamingLCCEngine:
         self.n_batches = 0
         self.n_updates = 0  # effective (non-noop) undirected updates
         self.delta_pairs_total = 0
+        # host-row-materialization ledger for the oo path: rows/bytes
+        # merged+packed from the store per batch (resident rows served
+        # from the device tier's persistent mirror are NOT counted here
+        # — their savings accrue in runtime.device.stats.bytes_saved).
+        self.oo_host_rows = 0
+        self.oo_host_bytes = 0
+        self.oo_resident_pairs = 0  # oo pairs counted on-device
 
     # ---------------- public API ----------------
     @staticmethod
@@ -141,6 +149,14 @@ class StreamingLCCEngine:
             # time-reverse: destroyed triangles == triangles an insertion
             # of ``dele`` into the post-delete graph would create.
             self.store.delete_edges(dele)
+            if self.runtime is not None and self.runtime.device is not None:
+                # the delta intersections below read POST-delete rows;
+                # patch the touched resident rows now so the device tier
+                # serves the same view mid-batch (the end-of-batch
+                # coherence fanout re-syncs after the inserts land).
+                self.runtime.device.notify_batch(
+                    np.unique(dele.ravel()).tolist()
+                )
             delta_pairs += self._accumulate_insertion_delta6(
                 dele, delta6, sign=-1
             )
@@ -164,11 +180,44 @@ class StreamingLCCEngine:
         self.n_batches += 1
         self.n_updates += int(ins.shape[0] + dele.shape[0])
         self.delta_pairs_total += delta_pairs
+        if (
+            self.runtime is not None
+            and self.runtime.device is not None
+            and dele.shape[0]
+        ):
+            # delete-only rows were already patched by the mid-batch
+            # sync against what is also their final state; tell the
+            # coming invalidate fanout not to patch them a second time
+            # (ids the insert phase touched again are NOT marked).
+            fresh = np.setdiff1d(
+                np.unique(dele.ravel()), np.unique(ins.ravel())
+            )
+            if fresh.size:
+                self.runtime.mark_device_fresh(fresh.tolist())
         if self.coherence is not None:
             self.coherence.on_batch(ins, dele, self.store)
+        elif self.runtime is not None:
+            # no coherence layer to fan the mutations out: the engine
+            # itself invalidates through the runtime, so both tiers
+            # (host payload caches + device residency) stay fresh — the
+            # next batch's oo rows are served from the resident mirror.
+            changed = np.unique(
+                np.concatenate([ins.ravel(), dele.ravel()])
+            ).astype(np.int64)
+            if changed.size:
+                self.runtime.invalidate(changed.tolist())
         schedule_incremental = None
         if self.runtime is not None and self.runtime.problem is not None:
-            schedule_incremental = self.runtime.maintain_schedule(ins, dele)
+            # residency drift: hand the coherence layer's rescored
+            # static set to the schedule so cache_ids refresh in place
+            # (a drifted top-C alone never forces a full rebuild).
+            new_ids = None
+            static = getattr(self.coherence, "static", None)
+            if static is not None and self.runtime.problem.cache_ids.size:
+                new_ids = static.vertex_ids
+            schedule_incremental = self.runtime.maintain_schedule(
+                ins, dele, new_cache_ids=new_ids
+            )
         return BatchResult(
             n_inserted=int(ins.shape[0]),
             n_deleted=int(dele.shape[0]),
@@ -247,8 +296,23 @@ class StreamingLCCEngine:
 
         w_old = max(int(store.degrees[np.concatenate([u, v])].max()), 1)
         w_new = max(max(len(r) for r in d_adj.values()), 1)
-        rows_u = store.padded_rows(u, w_old, sentinel=sent)
-        rows_v = store.padded_rows(v, w_old, sentinel=sent)
+        dev = self.runtime.device if self.runtime is not None else None
+        if dev is not None:
+            # resident hub rows come from the tier's persistent mirror
+            # (no per-batch DynamicCSR merge); only the rest are
+            # materialized from the store.
+            rows_u, res_u = dev.padded_rows(u, w_old, sentinel=sent)
+            rows_v, res_v = dev.padded_rows(v, w_old, sentinel=sent)
+            built = np.concatenate([u[~res_u], v[~res_v]])
+            self.oo_host_rows += int(built.size)
+            self.oo_host_bytes += int(store.degrees[built].sum()) * 4
+        else:
+            rows_u = store.padded_rows(u, w_old, sentinel=sent)
+            rows_v = store.padded_rows(v, w_old, sentinel=sent)
+            res_u = res_v = np.zeros(k, bool)
+            both = np.concatenate([u, v])
+            self.oo_host_rows += int(both.size)
+            self.oo_host_bytes += int(store.degrees[both].sum()) * 4
         rows_du = _padded_from_dict(d_adj, u, w_new, sent)
         rows_dv = _padded_from_dict(d_adj, v, w_new, sent)
 
@@ -256,12 +320,8 @@ class StreamingLCCEngine:
         # membership masks for the identities of the closing vertices.
         mask_oo = delta_intersect_masks(rows_u, rows_v, sentinel=sent)
         if self.use_kernel:
-            c_oo = delta_intersect_counts(
-                rows_u,
-                rows_v,
-                sentinel=sent,
-                block_e=self.block_e,
-                interpret=self.interpret,
+            c_oo = self._oo_counts(
+                u, v, rows_u, rows_v, res_u, res_v, dev, sent
             )
             assert np.array_equal(c_oo, mask_oo.sum(1)), (
                 "kernel counts disagree with membership masks"
@@ -289,6 +349,59 @@ class StreamingLCCEngine:
             if w_ids.size:
                 np.add.at(delta6, w_ids, sign * coef)
         return k
+
+    def _oo_counts(
+        self,
+        u: np.ndarray,
+        v: np.ndarray,
+        rows_u: np.ndarray,
+        rows_v: np.ndarray,
+        res_u: np.ndarray,
+        res_v: np.ndarray,
+        dev,
+        sent: int,
+    ) -> np.ndarray:
+        """Kernel-path old∩old counts, routed per pair: both sides
+        resident -> slot-vs-slot gather on device (zero upload); one
+        side resident -> gather vs the packed other side; neither ->
+        the classic ``delta_intersect`` path."""
+        k = u.shape[0]
+        if dev is None or not (res_u.any() or res_v.any()):
+            return delta_intersect_counts(
+                rows_u, rows_v, sentinel=sent,
+                block_e=self.block_e, interpret=self.interpret,
+            )
+        c = np.zeros(k, np.int64)
+        slots_u = dev.slot_of(u)
+        slots_v = dev.slot_of(v)
+        both = res_u & res_v
+        only_u = res_u & ~both
+        only_v = res_v & ~both
+        neither = ~(res_u | res_v)
+        if both.any():
+            c[both] = resident_intersect_counts(
+                dev.rows, slots_u[both], slots_b=slots_v[both],
+                sentinel=sent, interpret=self.interpret,
+            )
+            self.oo_resident_pairs += int(np.count_nonzero(both))
+        if only_u.any():
+            c[only_u] = resident_intersect_counts(
+                dev.rows, slots_u[only_u], rows_v[only_u],
+                sentinel=sent, interpret=self.interpret,
+            )
+            self.oo_resident_pairs += int(np.count_nonzero(only_u))
+        if only_v.any():
+            c[only_v] = resident_intersect_counts(
+                dev.rows, slots_v[only_v], rows_u[only_v],
+                sentinel=sent, interpret=self.interpret,
+            )
+            self.oo_resident_pairs += int(np.count_nonzero(only_v))
+        if neither.any():
+            c[neither] = delta_intersect_counts(
+                rows_u[neither], rows_v[neither], sentinel=sent,
+                block_e=self.block_e, interpret=self.interpret,
+            )
+        return c
 
     def _patch_lcc(self, vs: np.ndarray) -> None:
         # identical arithmetic to core.triangles.lcc_scores, elementwise,

@@ -254,3 +254,82 @@ def test_apply_delta_invalid_batch_leaves_problem_untouched():
         n_rounds=2, width=prob.width,
     )
     assert_problems_equal(prob, fresh)
+
+
+@pytest.mark.parametrize("seed,p", [(5, 1), (6, 4), (7, 8)])
+def test_apply_delta_residency_drift_matches_scratch_build(seed, p):
+    """Property: interleaving effective update batches with STATIC
+    RESIDENCY DRIFT — each batch re-scores the top-C from the current
+    degrees and hands the drifted set to ``apply_delta`` — keeps the
+    patched problem field-for-field bit-exact vs a from-scratch build
+    with that same residency, without ever rebuilding (the PR-3
+    follow-up: drift alone must not force a full schedule rebuild)."""
+    rng = np.random.default_rng(seed)
+    n = 80 + 10 * seed
+    csr = powerlaw_graph(n, 5, seed=seed)
+    cache_rows = 10
+    cache = build_static_degree_cache(csr.degrees, cache_rows)
+    width = csr.max_degree + 10
+    prob = build_sharded_problem(
+        csr, p, n_rounds=3, cache=cache, width=width
+    )
+    edges = _edge_set(csr)
+    degrees = csr.degrees.copy()
+    for _ in range(3):
+        ins, dele = _random_effective_delta(rng, edges, n, 12, 8)
+        edges.difference_update(map(tuple, dele.tolist()))
+        edges.update(map(tuple, ins.tolist()))
+        for a, b in ins:
+            degrees[a] += 1
+            degrees[b] += 1
+        for a, b in dele:
+            degrees[a] -= 1
+            degrees[b] -= 1
+        drifted = build_static_degree_cache(degrees, cache_rows)
+        prob.apply_delta(ins, dele, new_cache_ids=drifted.vertex_ids)
+        csr2 = from_edges(np.array(sorted(edges), np.int64), n)
+        assert np.array_equal(degrees, csr2.degrees)  # bookkeeping sane
+        fresh = build_sharded_problem(
+            csr2, p, n_rounds=3, cache=drifted, width=width
+        )
+        assert_problems_equal(prob, fresh)
+    # a pure residency refresh (no edges) also patches in place
+    flipped = build_static_degree_cache(-degrees.astype(np.float64) - 1,
+                                        cache_rows)
+    z = np.zeros((0, 2), np.int64)
+    prob.apply_delta(z, z, new_cache_ids=flipped.vertex_ids)
+    csr2 = from_edges(np.array(sorted(edges), np.int64), n)
+    fresh = build_sharded_problem(
+        csr2, p, n_rounds=3, cache=flipped, width=width
+    )
+    assert_problems_equal(prob, fresh)
+
+
+def test_maintain_schedule_refreshes_residency_without_rebuild():
+    """Runtime wiring: a drifted residency set flows through
+    ``maintain_schedule(new_cache_ids=...)`` as an incremental patch
+    (returns True, bumps the refresh counter, no rebuild)."""
+    from repro.core.runtime import ShardedRuntime
+    from repro.streaming import DynamicCSR
+
+    csr = powerlaw_graph(70, 5, seed=21)
+    store = DynamicCSR.from_csr(csr)
+    rt = ShardedRuntime(store, 4)
+    cache = build_static_degree_cache(csr.degrees, 8)
+    rt.attach_problem(build_sharded_problem(
+        csr, 4, cache=cache, width=csr.max_degree + 6
+    ))
+    z = np.zeros((0, 2), np.int64)
+    # drift only: rotate the residency set
+    new_ids = np.sort(
+        np.concatenate([cache.vertex_ids[2:],
+                        np.setdiff1d(np.arange(csr.n),
+                                     cache.vertex_ids)[:2]])
+    )
+    assert rt.maintain_schedule(z, z, new_cache_ids=new_ids) is True
+    assert rt.schedule_rebuilds == 0
+    assert rt.schedule_residency_refreshes == 1
+    assert np.array_equal(rt.problem.cache_ids, new_ids)
+    # unchanged set does not count as a refresh
+    assert rt.maintain_schedule(z, z, new_cache_ids=new_ids) is True
+    assert rt.schedule_residency_refreshes == 1

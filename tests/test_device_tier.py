@@ -1,0 +1,274 @@
+"""Device-resident hot-row tier: kernel vs oracle, residency selection /
+drift coherence, two-tier freshness, and the serving/streaming routes.
+"""
+import numpy as np
+import pytest
+
+from conftest import powerlaw_graph
+
+from repro.core.runtime import ShardedRuntime
+from repro.device import ResidencyManager
+from repro.kernels.resident_intersect import resident_intersect_counts
+from repro.serving import LiveQueryService, Query, QueryKind
+from repro.serving.provider import DirectRowProvider
+from repro.streaming import DynamicCSR, EdgeBatch
+from repro.streaming.incremental import StreamingLCCEngine
+from repro.streaming.updates import DELETE, INSERT
+
+
+def _random_rows(rng, n_rows, width, id_space):
+    out = np.full((n_rows, width), id_space, np.int32)
+    for i in range(n_rows):
+        k = int(rng.integers(0, width + 1))
+        out[i, :k] = np.sort(rng.choice(id_space, size=k, replace=False))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("e,wb", [(1, 4), (7, 8), (64, 16), (130, 32)])
+def test_resident_intersect_matches_oracle(e, wb):
+    import jax.numpy as jnp
+
+    from repro.kernels.ref import resident_intersect_ref
+
+    rng = np.random.default_rng(e * 31 + wb)
+    sent = 500
+    res = _random_rows(rng, 12, 24, sent)
+    rows = _random_rows(rng, e, wb, sent)
+    sa = rng.integers(0, 12, e).astype(np.int32)
+    sb = rng.integers(0, 12, e).astype(np.int32)
+    got = resident_intersect_counts(res, sa, rows, sentinel=sent)
+    want = np.asarray(
+        resident_intersect_ref(
+            jnp.asarray(res), jnp.asarray(sa), jnp.asarray(rows),
+            sentinel=sent,
+        ),
+        np.int64,
+    )
+    assert np.array_equal(got, want)
+    got2 = resident_intersect_counts(res, sa, slots_b=sb, sentinel=sent)
+    want2 = np.asarray(
+        resident_intersect_ref(
+            jnp.asarray(res), jnp.asarray(sa), slots_b=jnp.asarray(sb),
+            sentinel=sent,
+        ),
+        np.int64,
+    )
+    assert np.array_equal(got2, want2)
+
+
+def test_resident_intersect_empty_batch():
+    res = np.full((4, 8), 99, np.int32)
+    out = resident_intersect_counts(
+        res, np.zeros(0, np.int32), np.zeros((0, 4), np.int32), sentinel=99
+    )
+    assert out.shape == (0,)
+
+
+# ---------------------------------------------------------------------------
+# residency selection + drift coherence
+# ---------------------------------------------------------------------------
+def test_manager_selects_degree_scored_hot_set():
+    csr = powerlaw_graph(120, 6, seed=4)
+    store = DynamicCSR.from_csr(csr)
+    dev = ResidencyManager(store, slots=16)
+    assert dev.resident_rows == 16
+    deg = store.degrees
+    resident = np.flatnonzero(dev.slot_of(np.arange(csr.n)) >= 0)
+    threshold = np.sort(deg[resident]).min()
+    outsiders = np.setdiff1d(np.arange(csr.n), resident)
+    # every outsider scores no better than the weakest resident
+    assert deg[outsiders].max() <= threshold
+    # resident rows are bit-exact store rows, padded with the sentinel
+    for v in resident[:5]:
+        s = int(dev.slot_of(np.array([v]))[0])
+        row = store.row(int(v))
+        assert np.array_equal(dev._host[s, : row.size], row)
+        assert (dev._host[s, row.size:] == dev.sentinel).all()
+    assert dev.audit() == (16, 0)
+
+
+def test_manager_excludes_rows_wider_than_the_buffer():
+    csr = powerlaw_graph(100, 6, seed=9)
+    store = DynamicCSR.from_csr(csr)
+    width = int(np.sort(store.degrees)[-3])  # two rows too wide to fit
+    dev = ResidencyManager(store, slots=8, max_width=width)
+    resident = np.flatnonzero(dev.slot_of(np.arange(csr.n)) >= 0)
+    assert (store.degrees[resident] <= width).all()
+    assert dev.audit()[1] == 0
+
+
+def test_patch_evict_admit_and_epoch_bumps():
+    csr = powerlaw_graph(80, 5, seed=1)
+    store = DynamicCSR.from_csr(csr)
+    dev = ResidencyManager(
+        store, slots=6, max_width=int(store.max_degree) + 8
+    )
+    resident = np.flatnonzero(dev.slot_of(np.arange(csr.n)) >= 0)
+    hub = int(resident[np.argmax(store.degrees[resident])])
+    slots, epochs = dev.claim(np.array([hub]))
+    dev.check(slots, epochs)  # fresh handle passes
+
+    # small delta -> in-place patch (same slot, bumped epoch, fresh row)
+    absent = next(
+        v for v in range(store.n)
+        if v != hub and not store.has_edge(hub, v)
+        and dev.slot_of(np.array([v]))[0] < 0
+        and store.degrees[v] + 1 < store.degrees[resident].min()
+    )
+    store.insert_edges(np.array([[min(hub, absent), max(hub, absent)]]))
+    before = dev.stats.patches
+    dev.notify_batch([hub, absent])
+    assert dev.stats.patches == before + 1
+    assert int(dev.slot_of(np.array([hub]))[0]) == int(slots[0])
+    with pytest.raises(AssertionError):
+        dev.check(slots, epochs)  # pre-mutation handle is now stale
+    assert dev.audit()[1] == 0
+
+    # drift: raise an outsider's degree above the weakest resident
+    resident = np.flatnonzero(dev.slot_of(np.arange(csr.n)) >= 0)
+    weakest = int(resident[np.argmin(store.degrees[resident])])
+    outsider = next(
+        v for v in range(store.n)
+        if dev.slot_of(np.array([v]))[0] < 0 and store.degrees[v] > 0
+    )
+    target = int(store.degrees[weakest]) + 2
+    adds = [
+        v for v in range(store.n)
+        if v != outsider and not store.has_edge(outsider, v)
+    ][: target - int(store.degrees[outsider])]
+    edges = np.array(
+        [[min(outsider, v), max(outsider, v)] for v in adds], np.int64
+    )
+    store.insert_edges(edges)
+    dev.notify_batch(np.unique(edges.ravel()).tolist())
+    assert int(dev.slot_of(np.array([outsider]))[0]) >= 0, "admitted"
+    assert dev.stats.admits >= 1 and dev.stats.evicts >= 1
+    assert dev.audit()[1] == 0
+
+
+# ---------------------------------------------------------------------------
+# two-tier coherence property (satellite): after ANY insert/delete
+# stream, device-tier reads are bit-identical to DirectRowProvider reads
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("p", [1, 4])
+def test_two_tier_reads_match_direct_provider_after_any_stream(p):
+    csr = powerlaw_graph(96, 5, seed=20 + p)
+    rt = ShardedRuntime(None, p, n=csr.n, device_slots=12)
+    eng = StreamingLCCEngine(csr, use_kernel=False, runtime=rt)
+    direct = DirectRowProvider(eng.store, p=p)
+    direct.runtime.bind_store(eng.store)
+    rng = np.random.default_rng(100 + p)
+    probe = np.arange(csr.n)
+    for _ in range(5):
+        ins = rng.integers(0, csr.n, size=(25, 2))
+        src, dst = eng.store.to_csr().edge_list()
+        keep = src < dst
+        pool = np.stack([src[keep], dst[keep]], 1)
+        pick = rng.choice(pool.shape[0], size=min(10, pool.shape[0]),
+                          replace=False)
+        u = np.concatenate([ins[:, 0], pool[pick][:, 0]])
+        v = np.concatenate([ins[:, 1], pool[pick][:, 1]])
+        op = np.concatenate([
+            np.full(ins.shape[0], INSERT, np.int8),
+            np.full(pick.size, DELETE, np.int8),
+        ])
+        eng.apply_batch(EdgeBatch(u=u, v=v, op=op))
+        for rank in range(p):
+            got = rt.fetch_rows(rank, probe)
+            want = direct.runtime.fetch_rows(rank, probe)
+            for w in probe:
+                assert np.array_equal(got[int(w)], want[int(w)]), (
+                    f"rank {rank} vertex {w} diverged from the direct read"
+                )
+        # no stale resident slot survives the batch's invalidate
+        assert rt.device.audit()[1] == 0
+        assert rt.audit_freshness()[1] == 0
+    assert rt.device.stats.hits > 0, "the tier must actually serve reads"
+    if p > 1:  # at p=1 every fetch_rows read is local (and free)
+        agg = rt.aggregate_stats()
+        assert agg.device_hits > 0 and agg.device_bytes_saved > 0
+
+
+def test_fetch_rows_consults_device_before_host_cache():
+    csr = powerlaw_graph(80, 6, seed=3)
+    store = DynamicCSR.from_csr(csr)
+    rt = ShardedRuntime(store, 4, device_slots=8)
+    resident = np.flatnonzero(rt.device.slot_of(np.arange(csr.n)) >= 0)
+    v = int(resident[0])
+    rank = (int(rt.part.owner(v)) + 1) % 4  # remote at this rank
+    rows = rt.fetch_rows(rank, [v, v])
+    assert np.array_equal(rows[v], store.row(v))
+    st = rt.stats[rank]
+    assert st.device_hits == 2
+    assert st.cache_hits == 0 and st.cache_misses == 0
+    assert st.bytes_fetched == 0  # never reached the host cache/network
+    assert not rt.caches[rank].contains(v)
+
+
+# ---------------------------------------------------------------------------
+# consumers: serving + streaming stay bit-exact with the tier on
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("p,cross_rank", [(1, False), (4, False), (4, True)])
+def test_serving_with_device_tier_bit_exact_under_updates(p, cross_rank):
+    from repro.core.triangles import lcc_scores, triangles_per_vertex
+
+    csr = powerlaw_graph(90, 6, seed=40 + p)
+    svc = LiveQueryService(
+        csr, p=p, cross_rank=cross_rank, device_slots=10, use_kernel=True
+    )
+    rng = np.random.default_rng(41 + p)
+    for _ in range(3):
+        qs = []
+        for v in rng.integers(0, csr.n, 24):
+            qs.append(
+                Query.lcc(int(v)) if v % 2 else Query.triangles(int(v))
+            )
+        u, w = rng.integers(0, csr.n, 2)
+        if u != w:
+            qs.append(Query.common_neighbors(int(u), int(w)))
+        results = svc.scheduler.run(qs)
+        snap = svc.store.to_csr()
+        t_ref = triangles_per_vertex(snap)
+        lcc_ref = lcc_scores(snap, t_ref)
+        for r in results:
+            q = r.query
+            if q.kind == QueryKind.TRIANGLES:
+                assert r.value == t_ref[q.u]
+            elif q.kind == QueryKind.LCC:
+                assert r.value == lcc_ref[q.u]
+            else:
+                want = np.intersect1d(snap.row(q.u), snap.row(q.v))
+                assert r.value == want.size and np.array_equal(r.ids, want)
+        e = rng.integers(0, csr.n, size=(20, 2))
+        svc.apply_updates(EdgeBatch.inserts(e[e[:, 0] != e[:, 1]]))
+    svc.verify()  # streaming recount + zero stale rows on BOTH tiers
+    assert svc.engine.n_pairs_resident > 0
+    assert svc.runtime.device.stats.bytes_saved > 0
+
+
+@pytest.mark.parametrize("p", [1, 4])
+def test_streaming_oo_resident_kernel_bit_exact(p):
+    csr = powerlaw_graph(96, 6, seed=60 + p)
+    rt = ShardedRuntime(None, p, n=csr.n, device_slots=16)
+    eng = StreamingLCCEngine(csr, use_kernel=True, runtime=rt)
+    rng = np.random.default_rng(61 + p)
+    for _ in range(4):
+        ins = rng.integers(0, csr.n, size=(30, 2))
+        src, dst = eng.store.to_csr().edge_list()
+        keep = src < dst
+        pool = np.stack([src[keep], dst[keep]], 1)
+        pick = rng.choice(pool.shape[0], size=8, replace=False)
+        u = np.concatenate([ins[:, 0], pool[pick][:, 0]])
+        v = np.concatenate([ins[:, 1], pool[pick][:, 1]])
+        op = np.concatenate([
+            np.full(ins.shape[0], INSERT, np.int8),
+            np.full(8, DELETE, np.int8),
+        ])
+        eng.apply_batch(EdgeBatch(u=u, v=v, op=op))
+        eng.verify()  # checkpoints bit-exact vs recount
+    assert eng.oo_resident_pairs > 0, "resident pairs must route on-device"
+    assert rt.device.stats.bytes_saved > 0
+    assert rt.device.audit()[1] == 0

@@ -451,3 +451,65 @@ def test_service_shares_coherence_runtime():
         )
         _check_results(res, svc.store.to_csr())
     svc.verify()
+
+
+# ---------------------------------------------------------------------------
+# admission control / load shedding
+# ---------------------------------------------------------------------------
+def test_scheduler_sheds_on_queue_depth():
+    csr = powerlaw_graph(40, 4, seed=31)
+    store = DynamicCSR.from_csr(csr)
+    eng = QueryEngine(store, use_kernel=False)
+    sched = MicrobatchScheduler(eng, max_batch=4, max_queue=6)
+    accepted = [sched.submit(Query.triangles(v % 40)) for v in range(10)]
+    assert accepted == [True] * 6 + [False] * 4  # reject-with-reason
+    assert sched.pending == 6
+    assert sched.n_shed_depth == 4
+    assert sched.recorder.sheds == {"depth": 4}
+    res = sched.flush()  # admitted queries still serve exactly
+    assert len(res) == 6
+    _check_results(res, csr)
+    # the bound is on PENDING depth: a drained queue admits again
+    assert sched.submit(Query.lcc(1)) is True
+    # submit_many reports how many made it in
+    assert sched.submit_many([Query.lcc(v) for v in range(10)]) == 5
+    assert sched.n_shed_depth == 9
+    summ = sched.latency_summary()
+    assert summ.shed == 9
+    assert summ.shed_rate == pytest.approx(9 / (6 + 9))
+
+
+def test_scheduler_poll_sheds_stale_queries():
+    csr = powerlaw_graph(40, 4, seed=32)
+    store = DynamicCSR.from_csr(csr)
+    eng = QueryEngine(store, use_kernel=False)
+    clk = _FakeClock()
+    sched = MicrobatchScheduler(
+        eng, max_batch=8, max_wait=0.5, shed_wait=2.0, clock=clk
+    )
+    sched.submit(Query.triangles(3))  # will go stale
+    clk.t = 1.9
+    sched.submit(Query.lcc(5))  # still fresh at shed time
+    clk.t = 2.5
+    res = sched.poll()
+    # the stale query was rejected-with-reason, the fresh one served
+    # (its own 0.6s wait is past max_wait, so the window dispatched)
+    assert [r.query.u for r in res] == [5]
+    assert sched.n_shed_deadline == 1
+    assert sched.recorder.sheds == {"deadline": 1}
+    assert sched.latency_summary().shed == 1
+    _check_results(res, csr)
+
+
+def test_service_plumbs_admission_control():
+    csr = powerlaw_graph(60, 5, seed=33)
+    svc = LiveQueryService(csr, p=2, max_batch=8, max_queue=5)
+    admitted = svc.submit_many(
+        make_queries(svc.store.degrees, 12, kind="uniform", seed=34)
+    )
+    assert admitted == 5 and svc.scheduler.n_shed_depth == 7
+    assert svc.submit(Query.lcc(1)) is False  # still at the bound
+    res = svc.flush()
+    assert len(res) == 5
+    _check_results(res, svc.store.to_csr())
+    svc.verify()
