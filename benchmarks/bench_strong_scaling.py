@@ -107,8 +107,8 @@ def modeled(quick: bool = True):
 
 
 MEASURE_SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+from repro.distributed.spmd_runtime import ensure_host_devices
+ensure_host_devices(8)  # preserves external XLA_FLAGS; must precede jax init
 import json, time
 import numpy as np
 from repro.graphs.rmat import rmat_graph

@@ -1,0 +1,120 @@
+"""CI benchmark regression gate.
+
+    python benchmarks/ci_compare.py <baseline.json> <current.json> \
+        [--threshold 0.25]
+
+Compares each registered benchmark's key metric against the committed
+baseline (``results/benchmarks.json``) and exits non-zero if any
+regresses by more than ``--threshold`` (default 25%). Only the metrics
+named in ``METRICS`` gate — raw wall-clock numbers are too noisy on
+shared CI runners, so the gate sticks to ratios and rates that are
+stable across machines (speedups, hit rates, reduction fractions).
+
+Booleans in ``BOOLEANS`` must simply stay true (e.g. the SPMD
+measured-vs-modeled traffic agreement).
+
+A metric missing from the *baseline* is skipped with a note (new
+benchmark, not yet in the committed baseline — refresh it per
+benchmarks/README.md). A metric missing from the *current* run fails:
+the benchmark broke.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# metric path -> direction ("higher" means bigger is better)
+METRICS = {
+    "streaming_updates.incremental_speedup_vs_recount": "higher",
+    "streaming_updates.store_vectorized_speedup": "higher",
+    "serving_queries.microbatch_speedup_zipf": "higher",
+    "serving_queries.cache_comm_reduction_zipf": "higher",
+    "serving_queries.hit_rate_zipf": "higher",
+    "schedule_rebuild.schedule_incremental_speedup": "higher",
+    "device_tier.serving_materialization_reduction": "higher",
+    "device_tier.streaming_materialization_reduction": "higher",
+    "device_tier.device_hit_rate_zipf": "higher",
+    "cache_size_fig7.max_comm_reduction_adj_only": "higher",
+}
+
+# metric path -> must be truthy in the current run
+BOOLEANS = [
+    "spmd_scaling.model_agreement_all",
+    "schedule_rebuild.bit_exact",
+]
+
+
+def get(tree: dict, path: str):
+    node = tree
+    for part in path.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="maximum tolerated fractional regression")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.current) as f:
+        cur = json.load(f)
+
+    failures = []
+    for path, direction in METRICS.items():
+        b = get(base, path)
+        c = get(cur, path)
+        if b is None:
+            print(f"SKIP {path}: not in baseline (refresh the baseline "
+                  "to start gating it)")
+            continue
+        if c is None:
+            failures.append(f"{path}: present in baseline ({b}) but "
+                            "missing from the current run")
+            print(f"FAIL {path}: missing from current run")
+            continue
+        b, c = float(b), float(c)
+        if direction == "higher":
+            # regression = how far current fell below baseline
+            reg = (b - c) / abs(b) if b else 0.0
+        else:
+            reg = (c - b) / abs(b) if b else 0.0
+        status = "FAIL" if reg > args.threshold else "ok"
+        print(f"{status:4s} {path}: baseline {b:.4g} -> current {c:.4g} "
+              f"({-reg:+.1%} vs baseline, threshold -{args.threshold:.0%})")
+        if reg > args.threshold:
+            failures.append(
+                f"{path}: {b:.4g} -> {c:.4g} ({reg:.1%} regression)"
+            )
+
+    for path in BOOLEANS:
+        c = get(cur, path)
+        if c is None:
+            # unlike METRICS, booleans don't need a baseline: absence
+            # means the benchmark that produces the invariant broke.
+            failures.append(f"{path}: missing from the current run "
+                            "(the benchmark producing it failed)")
+            print(f"FAIL {path}: missing from current run")
+            continue
+        ok = bool(c)
+        print(f"{'ok  ' if ok else 'FAIL'} {path}: {c}")
+        if not ok:
+            failures.append(f"{path}: expected true, got {c}")
+
+    if failures:
+        print(f"\n{len(failures)} benchmark regression(s):")
+        for f_ in failures:
+            print("  - " + f_)
+        return 1
+    print("\nno benchmark regressions beyond threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,7 +1,10 @@
 """Benchmark runner: one benchmark per paper table/figure + roofline.
 
-``python -m benchmarks.run [--full] [--only <name>]``
-Writes results/benchmarks.json and prints a readable summary.
+``python -m benchmarks.run [--full] [--only <name>] [--out <path>]``
+Writes results/benchmarks.json (or ``--out``) and prints a readable
+summary. CI runs quick mode with ``--out results/BENCH_ci.json`` and
+gates regressions via ``benchmarks/ci_compare.py`` (see
+benchmarks/README.md for how to refresh the committed baseline).
 """
 from __future__ import annotations
 
@@ -19,6 +22,9 @@ def main(argv=None):
     ap.add_argument("--full", action="store_true",
                     help="larger graphs (slower, closer to paper scales)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="results/benchmarks.json",
+                    help="output JSON path (CI writes BENCH_ci.json so "
+                         "the committed baseline is never clobbered)")
     args = ap.parse_args(argv)
     quick = not args.full
 
@@ -32,6 +38,7 @@ def main(argv=None):
         bench_scores,
         bench_serving,
         bench_shared_scaling,
+        bench_spmd_scaling,
         bench_streaming,
         bench_strong_scaling,
     )
@@ -47,6 +54,7 @@ def main(argv=None):
         "serving_queries": lambda: bench_serving.run(quick),
         "device_tier": lambda: bench_device_tier.run(quick),
         "schedule_rebuild": lambda: bench_schedule_rebuild.run(quick),
+        "spmd_scaling": lambda: bench_spmd_scaling.run(quick),
         "roofline": lambda: bench_roofline.run(),
     }
     if args.only:
@@ -68,10 +76,10 @@ def main(argv=None):
             print(f"FAILED: {e}")
         print(flush=True)
 
-    os.makedirs("results", exist_ok=True)
-    with open("results/benchmarks.json", "w") as f:
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
         json.dump(results, f, indent=1, default=str)
-    print("wrote results/benchmarks.json")
+    print(f"wrote {args.out}")
 
     checklist(results)
     return 0
@@ -166,6 +174,13 @@ def checklist(results):
             f"(hit rate {sv['hit_rate_zipf']:.0%})",
             sv["cache_comm_reduction_zipf"] > 0.2
             and sv["hit_rate_zipf"] > 0.2,
+        ))
+    sp = results.get("spmd_scaling", {})
+    if "model_agreement_all" in sp:
+        checks.append((
+            "SPMD execution: measured all_to_all traffic == modeled "
+            "serve matrix on every run (rows and payload bytes)",
+            sp["model_agreement_all"],
         ))
     for msg, ok in checks:
         print(("PASS " if ok else "FAIL ") + msg)

@@ -49,9 +49,32 @@ from .cache import (
 )
 from .partition import Partition1D, partition_1d
 
-__all__ = ["ProviderStats", "ShardedRuntime"]
+__all__ = ["FetchEvent", "ProviderStats", "ShardedRuntime"]
 
 ID_BYTES = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class FetchEvent:
+    """One vertex's resolution inside ``fetch_rows`` — the control-plane
+    record the SPMD executor turns into a data-plane placement.
+
+    ``kind`` is how the read was served:
+
+    - ``"local"``  — owned by the reading rank (free; row lives in the
+      rank's own shard),
+    - ``"device"`` — served by the device-resident tier (no host cache
+      probe, no modeled bytes; content = the resident mirror row),
+    - ``"hit"``    — host-cache hit (content = the captured payload),
+    - ``"miss"``   — remote miss: the row was shipped owner -> reader
+      and accounted in the ``serve_rows`` matrix. In SPMD execution this
+      is exactly the set of rows that must travel through the
+      ``all_to_all`` collective; everything else stays rank-resident.
+    """
+
+    v: int
+    kind: str  # "local" | "device" | "hit" | "miss"
+    owner: int
 
 
 @dataclasses.dataclass
@@ -203,14 +226,25 @@ class ShardedRuntime:
 
     # ---------------- transport ----------------
     def fetch_rows(
-        self, rank: int, vertices: Sequence[int]
+        self,
+        rank: int,
+        vertices: Sequence[int],
+        record: Optional[List[FetchEvent]] = None,
     ) -> Dict[int, np.ndarray]:
         """Sorted adjacency row per distinct vertex, as read by ``rank``.
 
         Rows owned by ``rank`` bypass the cache (free); remote rows go
         through rank ``rank``'s ClampiCache admission — a hit returns the
         payload captured at fetch time, a miss pays the modeled remote
-        get and ships the row from its owner (serve matrix)."""
+        get and ships the row from its owner (serve matrix).
+
+        ``record`` (optional) collects one ``FetchEvent`` per vertex in
+        resolution order: the SPMD executor replays it to decide which
+        rows stay rank-resident on device and which must arrive through
+        the all_to_all collective — by construction the recorded
+        ``"miss"`` events are exactly the reads this same call charged to
+        ``serve_rows``, so the measured collective traffic reconciles
+        against the model without a second bookkeeping path."""
         rank = int(rank)
         st = self.stats[rank]
         out: Dict[int, np.ndarray] = {}
@@ -219,9 +253,12 @@ class ShardedRuntime:
         if self.caches is None:
             for v in vertices:
                 v = int(v)
-                if int(self.part.owner(v)) == rank:
+                owner = int(self.part.owner(v))
+                if owner == rank:
                     st.local_reads += 1
                     out[v] = store.row(v)
+                    if record is not None:
+                        record.append(FetchEvent(v, "local", owner))
                     continue
                 st.remote_reads += 1
                 if dev is not None:
@@ -230,23 +267,30 @@ class ShardedRuntime:
                         st.device_hits += 1
                         st.device_bytes_saved += row.size * ID_BYTES
                         out[v] = row
+                        if record is not None:
+                            record.append(FetchEvent(v, "device", owner))
                         continue
                 row = store.row(v)
                 st.cache_misses += 1
                 size = row.size * ID_BYTES
                 st.bytes_fetched += size
                 st.modeled_comm_s += self.net.remote(size)
-                self.serve_rows[int(self.part.owner(v)), rank] += 1
+                self.serve_rows[owner, rank] += 1
                 out[v] = row
+                if record is not None:
+                    record.append(FetchEvent(v, "miss", owner))
             return out
         cache = self.caches[rank]
         payloads = self._payloads[rank]
         deg = store.degrees
         for v in vertices:
             v = int(v)
-            if int(self.part.owner(v)) == rank:
+            owner = int(self.part.owner(v))
+            if owner == rank:
                 st.local_reads += 1
                 out[v] = store.row(v)
+                if record is not None:
+                    record.append(FetchEvent(v, "local", owner))
                 continue
             st.remote_reads += 1
             # the device tier sits below the host cache (closer to the
@@ -258,6 +302,8 @@ class ShardedRuntime:
                     st.device_hits += 1
                     st.device_bytes_saved += row.size * ID_BYTES
                     out[v] = row
+                    if record is not None:
+                        record.append(FetchEvent(v, "device", owner))
                     continue
             d = int(deg[v])
             size = d * ID_BYTES
@@ -274,16 +320,20 @@ class ShardedRuntime:
                     row = store.row(v).copy()
                     payloads[v] = row
                 out[v] = row
+                if record is not None:
+                    record.append(FetchEvent(v, "hit", owner))
                 continue
             st.cache_misses += 1
             st.bytes_fetched += size
-            self.serve_rows[int(self.part.owner(v)), rank] += 1
+            self.serve_rows[owner, rank] += 1
             row = store.row(v).copy()
             if cache.contains(v):  # admitted after the miss
                 payloads[v] = row
             else:
                 payloads.pop(v, None)
             out[v] = row
+            if record is not None:
+                record.append(FetchEvent(v, "miss", owner))
         # single comm ledger: the cache already charges remote reads on
         # miss plus hit/insert probe costs (paper §IV-D1) — mirror it.
         st.modeled_comm_s = cache.stats.comm_time

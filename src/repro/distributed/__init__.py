@@ -1,1 +1,1 @@
-from . import sharding, hub_gather, fault_tolerance  # noqa: F401
+from . import sharding, hub_gather, fault_tolerance, spmd_runtime  # noqa: F401

@@ -1,0 +1,414 @@
+"""Device-parallel SPMD execution of the sharded runtime's rank views.
+
+Since PR 3 the ``ShardedRuntime`` models p ranks — per-rank caches, a
+rank-indexed ``fetch_rows`` transport, an all-to-all ``serve_rows``
+matrix — but the rank views *execute* as a sequential Python loop over p
+in-process engines. This module runs them as real SPMD compute over a
+JAX device mesh, the way the static epoch ``async_engine`` already does:
+
+- **Rank-sharded state** — each rank's working set for one execution
+  unit (a serving microbatch, a streaming delta shard) is packed into a
+  rank-sharded padded row buffer ``[p, H+1, W]``: rows the rank holds
+  (its own shard's rows, cache-hit payloads, device-tier mirror rows)
+  plus the rows it *serves* to other ranks this unit.
+- **Collective transport** — the control plane (``fetch_rows`` cache
+  admission, stats, the modeled ``serve_rows`` matrix) stays host-side
+  and untouched; its recorded ``"miss"`` events become a serve list
+  ``serve_idx[p, p, S]``, and inside ``shard_map`` one
+  ``jax.lax.all_to_all`` ships exactly those rows owner -> requester.
+  The measured collective traffic (``CollectiveLedger``) therefore
+  reconciles *by construction* against the modeled matrix — the
+  executor asserts row-for-row equality, and the padded-vs-payload gap
+  is reported as wire overhead.
+- **On-device intersect** — every rank gathers its pair worklist from
+  the combined [held | fetched] buffer and counts |row_a ∩ row_b| inside
+  the mapped function: the Pallas ``intersect_count`` kernel when
+  ``use_kernel`` (the same kernel ``delta_intersect``/``point_query``
+  dispatch to), else the vectorized ``count_bsearch_jnp`` path. Counts
+  are exact integers either way, so SPMD execution is bit-exact against
+  the loop-mode engines — the property tests compare them
+  field-for-field.
+
+Consumers: ``serving.engine.ShardedQueryEngine(execution="spmd")`` and
+``streaming.incremental.StreamingLCCEngine(execution="spmd")``; drivers
+``launch/query_serve.py --spmd`` and ``launch/stream_run.py --spmd``.
+Multi-device CPU runs force host devices via ``ensure_host_devices``
+(``--xla_force_host_platform_device_count``), preserving any
+user-provided ``XLA_FLAGS``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..core.compat import shard_map
+from ..core.intersect import count_bsearch_jnp
+from ..kernels.bucketing import pow2_ceil
+from ..kernels.intersect_count import intersect_count
+
+__all__ = [
+    "CollectiveLedger",
+    "ShardWork",
+    "SpmdIntersectExecutor",
+    "ensure_host_devices",
+]
+
+ID_BYTES = 4
+_DEVCOUNT_FLAG = "--xla_force_host_platform_device_count"
+
+
+def ensure_host_devices(n: int, *, strict: bool = True) -> int:
+    """Make at least ``n`` JAX devices available, forcing host-platform
+    devices when none exist yet.
+
+    Appends ``--xla_force_host_platform_device_count=n`` to ``XLA_FLAGS``
+    — *preserving* any flags already set by the user or CI, and never
+    overriding an existing device-count directive (jax pins the device
+    count at first backend init, so an explicit external value must
+    win). Returns the device count actually available; with ``strict``
+    raises if it is still smaller than ``n`` (e.g. jax was already
+    initialized single-device before this call, or an external
+    directive pinned a smaller count). This is the one home of the
+    flag-preserving logic — drivers, benchmarks, and subprocess test
+    scripts call it instead of hand-editing ``XLA_FLAGS``."""
+    n = int(n)
+    flags = os.environ.get("XLA_FLAGS", "")
+    if _DEVCOUNT_FLAG not in flags:
+        os.environ["XLA_FLAGS"] = f"{flags} {_DEVCOUNT_FLAG}={n}".strip()
+    have = len(jax.devices())  # first call initializes with the flags
+    if strict and have < n:
+        raise RuntimeError(
+            f"need {n} devices for SPMD execution but only {have} are "
+            f"available; set XLA_FLAGS={_DEVCOUNT_FLAG}={n} before the "
+            "first jax use (jax locks the device count at first init)"
+        )
+    return have
+
+
+@dataclasses.dataclass
+class ShardWork:
+    """One rank's slice of an execution unit.
+
+    ``rows_held`` maps vertex id -> sorted 1-D row for every row that is
+    rank-resident this unit (local shard rows, cache-hit payloads,
+    device-tier mirror rows) — content is whatever the loop-mode engine
+    would have read, so staleness semantics carry over unchanged.
+    ``fetched_ids`` are the remote misses (in fetch order): their content
+    is *not* taken from this rank — it ships from the owner's buffer
+    through the collective. Every id referenced by ``pair_a``/``pair_b``
+    must be in exactly one of the two."""
+
+    rank: int
+    pair_a: np.ndarray  # int64 [E] vertex ids
+    pair_b: np.ndarray  # int64 [E]
+    rows_held: Dict[int, np.ndarray]
+    fetched_ids: Sequence[int] = ()
+
+
+@dataclasses.dataclass
+class CollectiveLedger:
+    """Measured collective traffic of SPMD execution units.
+
+    ``rows_shipped[owner, requester]`` counts rows that travelled
+    through ``all_to_all`` — the measured analogue of the runtime's
+    modeled ``serve_rows`` matrix (the executor asserts they agree
+    delta-for-delta). ``bytes_payload`` is the true row payload moved
+    (sum of shipped row widths, the quantity the ``NetworkModel``
+    charges); ``bytes_on_wire`` is what the padded collective actually
+    moved between devices (excludes the self-chunk), so
+    ``bytes_on_wire - bytes_payload`` is padding overhead."""
+
+    p: int
+    rows_shipped: np.ndarray  # [p, p] int64, owner -> requester
+    bytes_payload: int = 0
+    bytes_on_wire: int = 0
+    n_collectives: int = 0
+    n_pairs: int = 0
+    device_wall_s: float = 0.0
+
+    @staticmethod
+    def zero(p: int) -> "CollectiveLedger":
+        return CollectiveLedger(p=p, rows_shipped=np.zeros((p, p), np.int64))
+
+    def add(self, other: "CollectiveLedger") -> None:
+        assert other.p == self.p
+        self.rows_shipped += other.rows_shipped
+        self.bytes_payload += other.bytes_payload
+        self.bytes_on_wire += other.bytes_on_wire
+        self.n_collectives += other.n_collectives
+        self.n_pairs += other.n_pairs
+        self.device_wall_s += other.device_wall_s
+
+    @property
+    def total_rows(self) -> int:
+        return int(self.rows_shipped.sum())
+
+    def to_dict(self) -> dict:
+        return {
+            "p": self.p,
+            "rows_shipped": int(self.rows_shipped.sum()),
+            "bytes_payload": int(self.bytes_payload),
+            "bytes_on_wire": int(self.bytes_on_wire),
+            "n_collectives": int(self.n_collectives),
+            "n_pairs": int(self.n_pairs),
+            "device_wall_s": self.device_wall_s,
+        }
+
+
+def _body(
+    rows,  # [1, H+1+V, W] this rank's packed row buffer (pad row last)
+    serve_idx,  # [1, p, S] local indices of rows shipped to each rank
+    a_idx,  # [1, E] combined-buffer index of each pair's A row
+    b_idx,  # [1, E]
+    mask,  # [1, E] real-pair mask
+    *,
+    axis: str,
+    p: int,
+    s_max: int,
+    w: int,
+    sentinel: int,
+    use_kernel: bool,
+    block_e: int,
+    interpret: bool,
+):
+    # shard_map keeps the sharded leading axis at local size 1 — squeeze.
+    rows = rows[0]
+    serve_idx = serve_idx[0]
+    a_idx = a_idx[0]
+    b_idx = b_idx[0]
+    mask = mask[0]
+    # serve phase: gather this rank's serve lists and run ONE all-to-all
+    # — the dynamic analogue of the static engine's per-round fetch.
+    to_send = rows[serve_idx]  # [p, S, W]
+    got = jax.lax.all_to_all(
+        to_send, axis, split_axis=0, concat_axis=0, tiled=False
+    )
+    fetched = got.reshape(p * s_max, w)
+    combined = jnp.concatenate([rows, fetched], 0)
+    ra = combined[a_idx]
+    rb = combined[b_idx]
+    if use_kernel:
+        cnt = intersect_count(
+            ra, rb, sentinel=sentinel, block_e=block_e, interpret=interpret
+        )
+    else:
+        cnt = count_bsearch_jnp(ra, rb, sentinel)
+    return jnp.where(mask, cnt, 0).astype(jnp.int32)[None]
+
+
+class SpmdIntersectExecutor:
+    """Runs per-rank pair-intersection worklists as one ``shard_map``
+    over a 1-D ``("rank",)`` mesh of ``p`` devices.
+
+    One ``run()`` call is one execution unit: pack every rank's held
+    rows and serve lists into rank-sharded arrays, ship the remote
+    misses with a single ``all_to_all``, intersect every pair on its
+    executing rank's device, and return per-rank counts plus the
+    measured ``CollectiveLedger``."""
+
+    def __init__(
+        self,
+        part,
+        n: int,
+        *,
+        p: Optional[int] = None,
+        mesh: Optional[Mesh] = None,
+        use_kernel: Optional[bool] = None,
+        block_e: int = 128,
+        interpret: Optional[bool] = None,
+        axis: str = "rank",
+    ):
+        self.part = part
+        self.n = int(n)
+        self.p = int(p if p is not None else part.p)
+        self.axis = axis
+        if use_kernel is None:
+            use_kernel = jax.default_backend() == "tpu"
+        self.use_kernel = bool(use_kernel)
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        self.interpret = bool(interpret)
+        self.block_e = int(block_e)
+        if mesh is None:
+            devs = jax.devices()
+            if len(devs) < self.p:
+                raise RuntimeError(
+                    f"SPMD execution at p={self.p} needs {self.p} devices "
+                    f"but only {len(devs)} exist — call "
+                    f"ensure_host_devices({self.p}) (or set XLA_FLAGS="
+                    f"{_DEVCOUNT_FLAG}={self.p}) before the first jax use"
+                )
+            mesh = Mesh(np.array(devs[: self.p]), (axis,))
+        self.mesh = mesh
+        self.ledger = CollectiveLedger.zero(self.p)
+        self._fn_cache: dict = {}
+
+    # ---------------- compiled-function cache ----------------
+    def _fn(self, h1v: int, s_max: int, w: int, e_pad: int, be: int):
+        key = (h1v, s_max, w, e_pad, be)
+        fn = self._fn_cache.get(key)
+        if fn is None:
+            body = functools.partial(
+                _body,
+                axis=self.axis,
+                p=self.p,
+                s_max=s_max,
+                w=w,
+                sentinel=self.n,
+                use_kernel=self.use_kernel,
+                block_e=be,
+                interpret=self.interpret,
+            )
+            sh = P(self.axis)
+            fn = jax.jit(
+                shard_map(
+                    body,
+                    mesh=self.mesh,
+                    in_specs=(sh, sh, sh, sh, sh),
+                    out_specs=sh,
+                    check_vma=False,
+                )
+            )
+            self._fn_cache[key] = fn
+        return fn
+
+    # ---------------- one execution unit ----------------
+    def run(self, shards: List[ShardWork], store):
+        """Execute one unit. ``store`` provides ``row(v)`` for the rows
+        each owner serves (its authoritative shard content). Returns
+        ``(counts, ledger)``: per-rank int64 count arrays in worklist
+        order and this unit's measured collective ledger (also folded
+        into the cumulative ``self.ledger``)."""
+        p = self.p
+        assert len(shards) == p and all(
+            s.rank == k for k, s in enumerate(shards)
+        ), "need one ShardWork per rank, in rank order"
+        unit = CollectiveLedger.zero(p)
+        n_pairs = sum(s.pair_a.size for s in shards)
+        n_fetched = sum(len(s.fetched_ids) for s in shards)
+        if n_pairs == 0 and n_fetched == 0:
+            return [np.zeros(0, np.int64) for _ in range(p)], unit
+
+        # serve lists: ship[k][j] = rows owner k sends requester j, in
+        # requester fetch order (mirrors the serve_rows accounting).
+        ship: List[List[List[int]]] = [[[] for _ in range(p)] for _ in range(p)]
+        fetch_pos: List[Dict[int, int]] = [{} for _ in range(p)]
+        for j, sh in enumerate(shards):
+            for v in sh.fetched_ids:
+                v = int(v)
+                assert v not in sh.rows_held, (
+                    f"id {v} both held and fetched at rank {j}"
+                )
+                k = int(self.part.owner(v))
+                assert k != j, f"rank {j} fetching its own row {v}"
+                if v in fetch_pos[j]:
+                    continue  # one shipment per (owner, requester, id)
+                fetch_pos[j][v] = (k, len(ship[k][j]))
+                ship[k][j].append(v)
+
+        # serve content: an owner ships its authoritative store rows —
+        # reuse a held copy when the owner also holds the row this unit.
+        serve_rows_content: List[Dict[int, np.ndarray]] = [
+            {} for _ in range(p)
+        ]
+        w_max = 1
+        for k in range(p):
+            for j in range(p):
+                for v in ship[k][j]:
+                    if v not in serve_rows_content[k]:
+                        held = shards[k].rows_held.get(v)
+                        row = held if held is not None else np.asarray(
+                            store.row(v)
+                        )
+                        serve_rows_content[k][v] = row
+                        w_max = max(w_max, row.size)
+                    unit.rows_shipped[k, j] += 1
+                    unit.bytes_payload += (
+                        serve_rows_content[k][v].size * ID_BYTES
+                    )
+        for sh in shards:
+            for row in sh.rows_held.values():
+                w_max = max(w_max, row.size)
+        w = pow2_ceil(w_max, 1)
+
+        # rank buffers: [held | serve-extras | pad]; uniform H+1+V slots.
+        local_idx: List[Dict[int, int]] = [{} for _ in range(p)]
+        buf_rows: List[List[np.ndarray]] = [[] for _ in range(p)]
+        for k, sh in enumerate(shards):
+            for v, row in sh.rows_held.items():
+                local_idx[k][int(v)] = len(buf_rows[k])
+                buf_rows[k].append(np.asarray(row))
+            for v, row in serve_rows_content[k].items():
+                if v not in local_idx[k]:
+                    local_idx[k][v] = len(buf_rows[k])
+                    buf_rows[k].append(row)
+        # every device-array dimension is pow2-bucketed (like the width)
+        # so the jit cache actually hits across microbatches — otherwise
+        # h/s take arbitrary per-unit values and every unit recompiles.
+        h_max = max(len(r) for r in buf_rows)
+        h_buf = pow2_ceil(h_max + 1, 8)  # >= 1 slack row for the pad
+        pad_idx = h_buf - 1  # the (last) all-sentinel row
+        s_max = max(
+            (len(ship[k][j]) for k in range(p) for j in range(p)),
+            default=0,
+        )
+        s_max = pow2_ceil(s_max, 4)
+
+        sentinel = self.n
+        rows_arr = np.full((p, h_buf, w), sentinel, np.int32)
+        for k in range(p):
+            for i, row in enumerate(buf_rows[k]):
+                rows_arr[k, i, : row.size] = row
+        serve_idx = np.full((p, p, s_max), pad_idx, np.int32)
+        for k in range(p):
+            for j in range(p):
+                for s, v in enumerate(ship[k][j]):
+                    serve_idx[k, j, s] = local_idx[k][v]
+
+        # pair worklists -> combined-buffer indices
+        fetch_base = h_buf
+        e_max = max((s.pair_a.size for s in shards), default=0)
+        be = min(self.block_e, pow2_ceil(max(e_max, 1), 8))
+        e_pad = -(-max(e_max, 1) // be) * be
+        a_idx = np.full((p, e_pad), pad_idx, np.int32)
+        b_idx = np.full((p, e_pad), pad_idx, np.int32)
+        mask = np.zeros((p, e_pad), bool)
+
+        def resolve(j: int, v: int) -> int:
+            idx = local_idx[j].get(v)
+            if idx is not None:
+                return idx
+            k, s = fetch_pos[j][v]
+            return fetch_base + k * s_max + s
+
+        for j, sh in enumerate(shards):
+            e = sh.pair_a.size
+            if not e:
+                continue
+            a_idx[j, :e] = [resolve(j, int(v)) for v in sh.pair_a]
+            b_idx[j, :e] = [resolve(j, int(v)) for v in sh.pair_b]
+            mask[j, :e] = True
+
+        fn = self._fn(h_buf, s_max, w, e_pad, be)
+        t0 = time.perf_counter()
+        out = fn(rows_arr, serve_idx, a_idx, b_idx, mask)
+        out = np.asarray(jax.block_until_ready(out), np.int64)
+        unit.device_wall_s += time.perf_counter() - t0
+
+        unit.n_collectives += 1
+        unit.n_pairs += n_pairs
+        # padded wire bytes, self-chunk excluded (it never leaves the
+        # device) — the padding overhead the model does not charge.
+        unit.bytes_on_wire += p * (p - 1) * s_max * w * ID_BYTES
+        self.ledger.add(unit)
+        counts = [out[j, : shards[j].pair_a.size] for j in range(p)]
+        return counts, unit

@@ -1,6 +1,12 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^ MUST be the first two lines: jax locks the device count on first init.
+import os  # noqa: F401 — kept first: flag setup precedes every jax use
+# MUST run before anything initializes jax: jax locks the device count
+# on first init. ensure_host_devices PRESERVES user/CI-provided
+# XLA_FLAGS (an explicit external device-count directive wins; other
+# flags are kept either way). Non-strict: a deliberately smaller
+# external count falls through to the mesh-size checks below.
+from ..distributed.spmd_runtime import ensure_host_devices
+
+ensure_host_devices(512, strict=False)
 
 """Multi-pod dry-run: lower + compile every (arch x shape) cell on the
 production meshes and extract the roofline terms.
@@ -324,7 +330,7 @@ def setup_cell(arch_id: str, shape_id: str, mesh: Mesh, *, opt: bool = False):
         n_par = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params_sds))
         meta["params"] = n_par
         if kind == "recsys_train":
-            optz = adamw(lr=1e-3, weight_decay=0.0)
+            optim = adamw(lr=1e-3, weight_decay=0.0)
             opt_sds = jax.eval_shape(optim.init, params_sds)
             mspecs = type(opt_sds)(mu=pspecs, nu=pspecs, count=P())
             opt_ns = type(opt_sds)(

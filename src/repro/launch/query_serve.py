@@ -52,6 +52,13 @@ def main(argv=None):
                     help="cross-rank serving: run this many provider/engine "
                          "instances over the runtime, routing each query to "
                          "its owner rank (0: single-rank view of --p)")
+    ap.add_argument("--spmd", action="store_true",
+                    help="execute the --ranks rank views as real SPMD "
+                         "compute over a JAX device mesh (shard_map): "
+                         "remote rows ship through an all_to_all whose "
+                         "measured traffic is reconciled against the "
+                         "modeled serve matrix; needs >= ranks devices "
+                         "(host devices are forced automatically)")
     ap.add_argument("--max-wait-ms", type=float, default=None,
                     help="deadline-aware batching: flush a partial window "
                          "once its oldest query waited this long")
@@ -88,10 +95,19 @@ def main(argv=None):
         ap.error("--uncached is the no-cache baseline; a device tier on "
                  "top of it would serve remote reads from residency and "
                  "corrupt the comparison")
+    if args.spmd and args.ranks <= 0:
+        ap.error("--spmd executes the cross-rank views on devices; "
+                 "pass --ranks p")
     if args.smoke:
         args.scale = min(args.scale, 8)
         args.queries = min(args.queries, 256)
         args.verify = True
+    if args.spmd:
+        # must happen before anything initializes jax (device count is
+        # locked at first init); preserves user/CI-provided XLA_FLAGS.
+        from ..distributed.spmd_runtime import ensure_host_devices
+
+        ensure_host_devices(args.ranks)
 
     from ..core.triangles import lcc_scores, triangles_per_vertex
     from ..graphs.rmat import rmat_graph
@@ -103,7 +119,9 @@ def main(argv=None):
     p = args.ranks if cross_rank else args.p
     print(f"R-MAT S{args.scale} EF{args.edge_factor}: n={n}, m={csr.m} "
           f"(directed), max deg {csr.max_degree}"
-          + (f"  [cross-rank serving, p={p}]" if cross_rank else ""))
+          + (f"  [cross-rank serving, p={p}"
+             f"{', SPMD device mesh' if args.spmd else ''}]"
+             if cross_rank else ""))
 
     svc = LiveQueryService(
         csr,
@@ -119,6 +137,7 @@ def main(argv=None):
         device_slots=args.device_slots if args.device_tier else 0,
         device_width=args.device_width,
         uncached=args.uncached,
+        execution="spmd" if args.spmd else "loop",
     )
 
     # 2x safety factor: event kinds are drawn i.i.d., so an unlucky
@@ -208,6 +227,20 @@ def main(argv=None):
         print(f"cross-rank transport: {rt.cross_rank_rows_served()} rows "
               f"shipped owner->requester, invalidation fanout saved "
               f"{rt.invalidation_fanout_saved} msgs vs broadcast")
+    if args.spmd:
+        led = svc.engine.spmd.ledger
+        modeled_rows = rt.cross_rank_rows_served()
+        modeled_bytes = sum(s.bytes_fetched for s in rt.stats)
+        agree = (led.total_rows == modeled_rows
+                 and led.bytes_payload == modeled_bytes)
+        print(f"spmd[{led.p} devices]: {led.n_collectives} all_to_all "
+              f"collectives, {led.total_rows} rows / {led.bytes_payload} B "
+              f"payload shipped (modeled {modeled_rows} rows / "
+              f"{modeled_bytes} B — {'EXACT match' if agree else 'MISMATCH'}"
+              f"), {led.bytes_on_wire} B on the padded wire, "
+              f"{led.n_pairs} pairs intersected on-device in "
+              f"{led.device_wall_s:.2f}s")
+        assert agree, "measured collective traffic != modeled serve matrix"
     print(f"pair dedup: {svc.engine.n_pairs_raw} raw -> "
           f"{svc.engine.n_pairs_total} intersected")
     if args.max_queue is not None or args.shed_wait_ms is not None:

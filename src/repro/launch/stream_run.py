@@ -51,6 +51,13 @@ def main(argv=None):
                          "and the coherence replay)")
     ap.add_argument("--ranks", type=int, default=None,
                     help="alias for --p (overrides it when given)")
+    ap.add_argument("--spmd", action="store_true",
+                    help="execute the per-rank delta shards as real SPMD "
+                         "compute over a JAX device mesh (shard_map): "
+                         "remote rows ship owner->rank through an "
+                         "all_to_all and the old-intersect-old counts run "
+                         "on-device, cross-checked against the host "
+                         "membership masks; needs >= ranks devices")
     ap.add_argument("--adversarial", action="store_true",
                     help="hub-targeted deletes (stresses degree-score drift)")
     ap.add_argument("--cache-rows", type=int, default=256)
@@ -78,6 +85,12 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     ranks = args.ranks if args.ranks is not None else args.p
+    if args.spmd:
+        # before anything initializes jax (the device count is locked at
+        # first init); preserves user/CI-provided XLA_FLAGS.
+        from ..distributed.spmd_runtime import ensure_host_devices
+
+        ensure_host_devices(ranks)
 
     from ..core.rma import assert_problems_equal, build_sharded_problem
     from ..graphs.rmat import rmat_adversarial_stream, rmat_stream
@@ -89,7 +102,8 @@ def main(argv=None):
     print(f"R-MAT S{args.scale} EF{args.edge_factor} stream: n={n}, "
           f"{total_ops} inserts (+{args.delete_frac:.0%} deletes"
           f"{', hub-targeted' if args.adversarial else ''}) in "
-          f"{args.batches} batches of {batch_size}, ranks={ranks}")
+          f"{args.batches} batches of {batch_size}, ranks={ranks}"
+          + ("  [SPMD device mesh]" if args.spmd else ""))
 
     coh = StreamingCacheCoherence(
         n,
@@ -103,6 +117,7 @@ def main(argv=None):
         use_kernel=not args.no_kernel,
         compact_threshold=args.compact_threshold,
         coherence=coh,
+        execution="spmd" if args.spmd else "loop",
     )
     runtime = eng.runtime
     if args.device_tier:
@@ -197,6 +212,15 @@ def main(argv=None):
           f"{rep.static_rebuilds} static rebuilds, "
           f"{coh.clampi.stats.evictions} evictions, "
           f"modeled comm {coh.total_comm_time * 1e3:.2f} ms")
+    if args.spmd:
+        led = eng.spmd.ledger
+        print(f"spmd[{led.p} devices]: {led.n_collectives} all_to_all "
+              f"collectives, {led.total_rows} remote rows / "
+              f"{led.bytes_payload} B payload shipped owner->rank, "
+              f"{led.bytes_on_wire} B on the padded wire, "
+              f"{led.n_pairs} oo pairs intersected on-device in "
+              f"{led.device_wall_s:.2f}s (counts cross-checked vs host "
+              f"masks every batch)")
     if args.maintain_schedule:
         print(f"schedule: {runtime.schedule_deltas} incremental deltas, "
               f"{runtime.schedule_rebuilds} width-overflow rebuilds, "

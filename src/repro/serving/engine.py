@@ -27,11 +27,12 @@ vertex id, matching the reference ordering ``sort by (-lcc, id)``.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.runtime import ShardedRuntime
+from ..core.runtime import FetchEvent, ShardedRuntime
 from ..core.triangles import lcc_scores, triangles_per_vertex
 from ..kernels.bucketing import pack_rows, width_classes
 from ..kernels.delta_intersect import delta_intersect_masks
@@ -40,7 +41,27 @@ from ..kernels.resident_intersect import resident_intersect_counts
 from .provider import DirectRowProvider, RuntimeRowProvider
 from .requests import Query, QueryKind, QueryResult
 
-__all__ = ["QueryEngine", "ShardedQueryEngine"]
+__all__ = ["PreparedBatch", "QueryEngine", "ShardedQueryEngine"]
+
+
+@dataclasses.dataclass
+class PreparedBatch:
+    """Host-side half of one microbatch: rows fetched (control plane
+    complete — cache stats and the serve matrix are already charged),
+    pair worklist deduplicated. What remains is counting the unique
+    pairs — in loop mode immediately on this engine, in SPMD mode as
+    one rank-sharded device call across all engines."""
+
+    queries: Sequence[Query]
+    tri: List[Query]
+    cn: List[Query]
+    rows: Dict[int, np.ndarray]
+    u_lo: np.ndarray  # unique canonical pairs, low id
+    u_hi: np.ndarray
+    inv: np.ndarray  # raw pair -> unique pair scatter
+    qid: Optional[np.ndarray]  # tri-query index per raw tri pair
+    n_tri_pairs: int  # raw tri pairs (rest of `inv` are cn pairs)
+    record: Optional[List[FetchEvent]] = None
 
 
 class QueryEngine:
@@ -74,10 +95,21 @@ class QueryEngine:
 
     # ---------------- point/batch execution ----------------
     def execute_batch(self, queries: Sequence[Query]) -> List[QueryResult]:
+        prep = self.prepare_batch(queries)
+        counts = self._pair_counts(prep.u_lo, prep.u_hi, prep.rows)
+        return self.finalize_batch(prep, counts)
+
+    def prepare_batch(
+        self,
+        queries: Sequence[Query],
+        record: Optional[List[FetchEvent]] = None,
+    ) -> PreparedBatch:
+        """Fetch rows + build the deduplicated pair worklist (all the
+        control-plane work of a microbatch; see ``PreparedBatch``)."""
         tri = [q for q in queries
                if q.kind in (QueryKind.LCC, QueryKind.TRIANGLES)]
         cn = [q for q in queries if q.kind == QueryKind.COMMON_NEIGHBORS]
-        rows = self._fetch_rows_for(tri, cn)
+        rows = self._fetch_rows_for(tri, cn, record=record)
 
         # pair worklist: (target, neighbor) per tri/lcc query + (u, v) per
         # common-neighbors query, all as flat arrays
@@ -102,9 +134,30 @@ class QueryEngine:
         uniq, inv = np.unique(key, return_inverse=True)
         u_lo = uniq // self.store.n
         u_hi = uniq % self.store.n
-        counts = self._pair_counts(u_lo, u_hi, rows)[inv]
         self.n_pairs_total += int(uniq.size)
         self.n_pairs_raw += int(key.size)
+        qid = np.concatenate(qid_parts) if qid_parts else None
+        return PreparedBatch(
+            queries=queries,
+            tri=tri,
+            cn=cn,
+            rows=rows,
+            u_lo=u_lo,
+            u_hi=u_hi,
+            inv=inv,
+            qid=qid,
+            n_tri_pairs=int(key.size - len(cn)),
+            record=record,
+        )
+
+    def finalize_batch(
+        self, prep: PreparedBatch, uniq_counts: np.ndarray
+    ) -> List[QueryResult]:
+        """Scatter unique-pair counts back into query results (the
+        execution-mode-independent half: loop and SPMD counts are the
+        same integers, so results are bit-identical)."""
+        queries, tri, cn, rows = prep.queries, prep.tri, prep.cn, prep.rows
+        counts = np.asarray(uniq_counts, np.int64)[prep.inv]
 
         # scatter: S(v) = sum_j |N(v) ∩ N(j)| per tri query, T = S/2.
         # S is even whenever the row views are mutually consistent; a
@@ -112,11 +165,10 @@ class QueryEngine:
         # asymmetric and S odd — serve floor(S/2) rather than killing
         # the whole microbatch (staleness is the documented divergence
         # mode, and audit_freshness/verify expose it).
-        n_tri_pairs = key.size - len(cn)
+        n_tri_pairs = prep.n_tri_pairs
         s = np.zeros(len(tri), np.int64)
         if n_tri_pairs:
-            qid = np.concatenate(qid_parts)
-            np.add.at(s, qid, counts[:n_tri_pairs])
+            np.add.at(s, prep.qid, counts[:n_tri_pairs])
         t_of = s // 2
         cn_counts = counts[n_tri_pairs:]
 
@@ -152,7 +204,10 @@ class QueryEngine:
         return getattr(self.provider, "residency", None)
 
     def _fetch_rows_for(
-        self, tri: Sequence[Query], cn: Sequence[Query]
+        self,
+        tri: Sequence[Query],
+        cn: Sequence[Query],
+        record: Optional[List[FetchEvent]] = None,
     ) -> Dict[int, np.ndarray]:
         """Two-phase dedup'd row fetch: endpoints, then their neighbors.
 
@@ -168,7 +223,7 @@ class QueryEngine:
         # dedup preserving order of first use (what the cache replay sees)
         _, first = np.unique(ep, return_index=True)
         need = ep[np.sort(first)]
-        rows = self.provider.fetch_rows(need)
+        rows = self.provider.fetch_rows(need, record=record)
         if tri:
             nbrs = np.unique(
                 np.concatenate([rows[q.u] for q in tri]).astype(np.int64)
@@ -178,7 +233,7 @@ class QueryEngine:
             if dev is not None and need2.size:
                 need2 = need2[dev.slot_of(need2) < 0]
             if need2.size:
-                rows.update(self.provider.fetch_rows(need2))
+                rows.update(self.provider.fetch_rows(need2, record=record))
         return rows
 
     def _pair_counts(
@@ -204,13 +259,8 @@ class QueryEngine:
                 + sum(rows[int(x)].size for x in u_hi)
             )
             return out
-        n_pairs = u_lo.size
-        lo_in = np.fromiter((int(x) in rows for x in u_lo), bool, n_pairs)
-        hi_in = np.fromiter((int(x) in rows for x in u_hi), bool, n_pairs)
-        assert bool(np.all(lo_in | hi_in)), (
-            "every pair has at least one fetched endpoint"
-        )
-        out = np.zeros(n_pairs, np.int64)
+        lo_in, hi_in, groups = self._residency_groups(u_lo, u_hi, rows)
+        out = np.zeros(u_lo.size, np.int64)
         host = lo_in & hi_in
         if host.any():
             idx = np.flatnonzero(host)
@@ -223,12 +273,7 @@ class QueryEngine:
             self.host_pack_bytes += 4 * int(
                 sum(r.size for r in ra) + sum(r.size for r in rb)
             )
-        # ~hi_in and ~lo_in are disjoint (the assert above): exactly one
-        # side of a routed pair stayed on device.
-        for res_idx, res_v, mat_v in (
-            (np.flatnonzero(~hi_in), u_hi, u_lo),
-            (np.flatnonzero(~lo_in), u_lo, u_hi),
-        ):
+        for res_idx, res_v, mat_v in groups:
             if res_idx.size == 0:
                 continue
             out[res_idx] = self._resident_counts(
@@ -239,6 +284,38 @@ class QueryEngine:
             )
             self.n_pairs_resident += int(res_idx.size)
         return out
+
+    @staticmethod
+    def _residency_groups(
+        u_lo: np.ndarray, u_hi: np.ndarray, rows: Dict[int, np.ndarray]
+    ):
+        """Residency routing shared by loop mode (``_pair_counts``) and
+        SPMD mode (``ShardedQueryEngine._shard_work``): which side of
+        each unique pair was materialized, plus the routed groups in the
+        canonical order (resident-hi first, then resident-lo). ~hi_in
+        and ~lo_in are disjoint (asserted): exactly one side of a
+        routed pair stayed on device."""
+        n_pairs = u_lo.size
+        lo_in = np.fromiter((int(x) in rows for x in u_lo), bool, n_pairs)
+        hi_in = np.fromiter((int(x) in rows for x in u_hi), bool, n_pairs)
+        assert bool(np.all(lo_in | hi_in)), (
+            "every pair has at least one fetched endpoint"
+        )
+        groups = (
+            (np.flatnonzero(~hi_in), u_hi, u_lo),
+            (np.flatnonzero(~lo_in), u_lo, u_hi),
+        )
+        return lo_in, hi_in, groups
+
+    @staticmethod
+    def _claim_resident(dev, vs: np.ndarray) -> np.ndarray:
+        """Claim + epoch-check one routed group's resident side (the
+        ledger update both execution modes must perform identically);
+        returns the slots."""
+        slots, epochs = dev.claim(vs)
+        assert bool(np.all(slots >= 0)), "routing bug: non-resident pair"
+        dev.check(slots, epochs)  # stale handles are impossible by design
+        return slots
 
     def _resident_counts(
         self,
@@ -251,9 +328,7 @@ class QueryEngine:
         """|row(resident_v[i]) ∩ rows_other[i]| with the resident side
         gathered from the device buffer (kernel path) or its host
         mirror (host path) — never re-materialized from the store."""
-        slots, epochs = dev.claim(resident_v)
-        assert bool(np.all(slots >= 0)), "routing bug: non-resident pair"
-        dev.check(slots, epochs)  # stale handles are impossible by design
+        slots = self._claim_resident(dev, resident_v)
         out = np.zeros(len(rows_other), np.int64)
         self.host_pack_bytes += 4 * int(sum(r.size for r in rows_other))
         widths = width_classes([r.size for r in rows_other])
@@ -311,7 +386,20 @@ class ShardedQueryEngine:
     cache exactly as the static engine's all-to-all serve lists would
     ship them. Results reassemble in submission order, so answers are
     independent of the routing (the scheduler and callers can't tell p=1
-    from p=8 apart from the metrics)."""
+    from p=8 apart from the metrics).
+
+    ``execution`` picks how the p rank views run their intersect work:
+
+    - ``"loop"`` — sequential Python loop over the p in-process engines
+      (the modeled runtime, as before);
+    - ``"spmd"`` — one rank-sharded ``shard_map`` call per microbatch
+      over a p-device mesh (``SpmdIntersectExecutor``): every rank's
+      held rows are device-resident, remote misses arrive through a
+      single ``all_to_all`` whose measured traffic is asserted equal to
+      the ``serve_rows`` delta the control plane modeled, and pair
+      counts run on device. Answers, per-rank cache stats, and the
+      serve matrix are bit-identical between the two modes (only the
+      host-packing ledgers differ — SPMD does not pack rows per pair)."""
 
     def __init__(
         self,
@@ -322,7 +410,9 @@ class ShardedQueryEngine:
         block_e: int = 128,
         interpret: Optional[bool] = None,
         lcc_source: Optional[Callable[[], np.ndarray]] = None,
+        execution: str = "loop",
     ):
+        assert execution in ("loop", "spmd"), execution
         self.runtime = runtime
         self.engines = [
             QueryEngine(
@@ -336,6 +426,18 @@ class ShardedQueryEngine:
             for rank in range(runtime.p)
         ]
         self.store = store
+        self.execution = execution
+        self.spmd = None
+        if execution == "spmd":
+            from ..distributed.spmd_runtime import SpmdIntersectExecutor
+
+            self.spmd = SpmdIntersectExecutor(
+                runtime.part,
+                runtime.n,
+                use_kernel=use_kernel,
+                block_e=block_e,
+                interpret=interpret,
+            )
 
     def route(self, q: Query) -> int:
         """Owner rank that executes ``q``."""
@@ -347,6 +449,8 @@ class ShardedQueryEngine:
         by_rank: Dict[int, List[int]] = {}
         for i, q in enumerate(queries):
             by_rank.setdefault(self.route(q), []).append(i)
+        if self.execution == "spmd":
+            return self._execute_batch_spmd(queries, by_rank)
         out: List[Optional[QueryResult]] = [None] * len(queries)
         for rank, idxs in sorted(by_rank.items()):
             results = self.engines[rank].execute_batch(
@@ -355,6 +459,95 @@ class ShardedQueryEngine:
             for i, r in zip(idxs, results):
                 out[i] = r
         return out  # type: ignore[return-value]
+
+    # ---------------- SPMD execution ----------------
+    def _execute_batch_spmd(
+        self, queries: Sequence[Query], by_rank: Dict[int, List[int]]
+    ) -> List[QueryResult]:
+        """One device-parallel microbatch: per-rank prepare (control
+        plane: cache admission, stats, serve matrix — host-side and
+        identical to loop mode), then ONE rank-sharded intersect call,
+        then per-rank finalize. The measured collective rows are
+        asserted equal, owner-for-requester, to the modeled
+        ``serve_rows`` delta this same microbatch produced."""
+        from ..distributed.spmd_runtime import ShardWork
+
+        rt = self.runtime
+        serve_before = rt.serve_rows.copy()
+        empty = np.zeros(0, np.int64)
+        preps: List[Optional[PreparedBatch]] = [None] * rt.p
+        shards: List[ShardWork] = []
+        for rank in range(rt.p):
+            idxs = by_rank.get(rank)
+            if not idxs:
+                shards.append(ShardWork(rank, empty, empty, {}))
+                continue
+            record: List[FetchEvent] = []
+            prep = self.engines[rank].prepare_batch(
+                [queries[i] for i in idxs], record=record
+            )
+            preps[rank] = prep
+            shards.append(self._shard_work(rank, prep, record))
+        counts, unit = self.spmd.run(shards, rt.store)
+        measured, modeled = unit.rows_shipped, rt.serve_rows - serve_before
+        assert np.array_equal(measured, modeled), (
+            "SPMD collective traffic diverged from the modeled serve "
+            f"matrix:\nmeasured=\n{measured}\nmodeled=\n{modeled}"
+        )
+        out: List[Optional[QueryResult]] = [None] * len(queries)
+        for rank, idxs in sorted(by_rank.items()):
+            results = self.engines[rank].finalize_batch(
+                preps[rank], counts[rank]
+            )
+            for i, r in zip(idxs, results):
+                out[i] = r
+        return out  # type: ignore[return-value]
+
+    def _shard_work(
+        self, rank: int, prep: PreparedBatch, record: List[FetchEvent]
+    ):
+        """Turn one rank's prepared microbatch into its SPMD slice:
+        local rows / cache hits / device-mirror rows stay rank-resident,
+        misses ship through the collective. Device-tier bookkeeping
+        (claim + epoch check per resident pair side) runs exactly as
+        loop mode's resident routing would, so the residency ledgers
+        stay field-for-field identical."""
+        from ..distributed.spmd_runtime import ShardWork
+
+        eng = self.engines[rank]
+        rows = prep.rows
+        held: Dict[int, np.ndarray] = {}
+        fetched: List[int] = []
+        for ev in record:
+            if ev.kind == "miss":
+                fetched.append(ev.v)
+            else:
+                held[ev.v] = rows[ev.v]
+        dev = eng.residency
+        u_lo, u_hi = prep.u_lo, prep.u_hi
+        if dev is not None and u_lo.size:
+            # the same routing (and group order) loop-mode _pair_counts
+            # applies, so the residency claim/check ledgers match.
+            _, _, groups = QueryEngine._residency_groups(u_lo, u_hi, rows)
+            for res_idx, res_v, _mat_v in groups:
+                if res_idx.size == 0:
+                    continue
+                vs = res_v[res_idx]
+                slots = QueryEngine._claim_resident(dev, vs)
+                mirror = dev.host_rows(slots)
+                widths = dev.widths[slots]
+                for i, v in enumerate(vs):
+                    v = int(v)
+                    if v not in held:
+                        held[v] = mirror[i, : int(widths[i])].copy()
+                eng.n_pairs_resident += int(res_idx.size)
+        return ShardWork(
+            rank,
+            prep.u_lo.astype(np.int64),
+            prep.u_hi.astype(np.int64),
+            held,
+            fetched,
+        )
 
     # ---------------- aggregated accounting ----------------
     @property

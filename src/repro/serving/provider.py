@@ -28,12 +28,12 @@ exists.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, Optional, Sequence
+from typing import Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
 
 from ..core.cache import NetworkModel
-from ..core.runtime import ProviderStats, ShardedRuntime
+from ..core.runtime import FetchEvent, ProviderStats, ShardedRuntime
 
 __all__ = [
     "ProviderStats",
@@ -85,9 +85,15 @@ class RuntimeRowProvider:
         return self.runtime.device
 
     # ---------------- reads ----------------
-    def fetch_rows(self, vertices: Sequence[int]) -> Dict[int, np.ndarray]:
-        """Sorted adjacency row per distinct vertex (callers dedup)."""
-        return self.runtime.fetch_rows(self.rank, vertices)
+    def fetch_rows(
+        self,
+        vertices: Sequence[int],
+        record: Optional[List[FetchEvent]] = None,
+    ) -> Dict[int, np.ndarray]:
+        """Sorted adjacency row per distinct vertex (callers dedup).
+        ``record`` collects per-vertex ``FetchEvent`` resolutions for
+        the SPMD executor's placement plan."""
+        return self.runtime.fetch_rows(self.rank, vertices, record=record)
 
     # ---------------- coherence ----------------
     def notify_batch(self, changed_ids: Iterable[int]) -> None:

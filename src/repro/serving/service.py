@@ -61,8 +61,13 @@ class LiveQueryService:
         coherence: Optional[StreamingCacheCoherence] = None,
         provider=None,
         uncached: bool = False,
+        execution: str = "loop",
         stream_kw: Optional[dict] = None,
     ):
+        assert execution == "loop" or cross_rank, (
+            "SPMD execution runs the p cross-rank views on devices — "
+            "pass cross_rank=True"
+        )
         hook = coherence or ProviderCoherenceHook()
         self.stream = StreamingLCCEngine(
             csr,
@@ -102,6 +107,7 @@ class LiveQueryService:
                 use_kernel=use_kernel,
                 interpret=interpret,
                 lcc_source=lcc_source,
+                execution=execution,
             )
             self.providers = [e.provider for e in self.engine.engines]
             self.provider = self.providers[rank]

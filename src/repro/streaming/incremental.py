@@ -28,7 +28,7 @@ with the same arithmetic as ``lcc_scores`` (bit-exact vs a recount).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -78,6 +78,13 @@ class StreamingLCCEngine:
     deltas are integer scatter-adds, so the sharded result is bit-exact
     vs the unsharded one at any p. The runtime also carries the optional
     static pull schedule, kept fresh per batch via ``maintain_schedule``.
+
+    ``execution="spmd"`` runs the per-rank shards as ONE rank-sharded
+    ``shard_map`` call per batch phase (``SpmdIntersectExecutor``):
+    remote rows ship owner -> rank through an ``all_to_all`` and the
+    old∩old counts come back from the device, cross-checked against the
+    host membership masks — bit-exact vs ``execution="loop"`` at any p
+    (property-tested field-for-field, including every ledger).
     """
 
     def __init__(
@@ -91,7 +98,9 @@ class StreamingLCCEngine:
         compact_threshold: float = 0.25,
         coherence=None,
         runtime: Optional[ShardedRuntime] = None,
+        execution: str = "loop",
     ):
+        assert execution in ("loop", "spmd"), execution
         self.store = DynamicCSR.from_csr(
             csr, compact_threshold=compact_threshold
         )
@@ -107,6 +116,22 @@ class StreamingLCCEngine:
         self.runtime = runtime
         if runtime is not None:
             runtime.bind_store(self.store)
+        assert execution == "loop" or runtime is not None, (
+            "SPMD execution shards the worklist by the runtime's owner "
+            "partition — attach a ShardedRuntime (or coherence layer)"
+        )
+        self.execution = execution
+        self.spmd = None
+        if execution == "spmd":
+            from ..distributed.spmd_runtime import SpmdIntersectExecutor
+
+            self.spmd = SpmdIntersectExecutor(
+                runtime.part,
+                runtime.n,
+                use_kernel=use_kernel,
+                block_e=block_e,
+                interpret=interpret,
+            )
         self.shard_pairs = np.zeros(
             runtime.p if runtime is not None else 1, np.int64
         )  # row pairs processed per owner rank (worklist balance)
@@ -263,39 +288,114 @@ class StreamingLCCEngine:
         for x in d_adj:
             d_adj[x] = np.array(sorted(d_adj[x]), np.int64)
 
-        if self.runtime is not None and self.runtime.p > 1:
+        spmd = self.spmd is not None
+        if self.runtime is not None and (self.runtime.p > 1 or spmd):
             # shard the delta worklist by owner rank of the first
             # endpoint; per-shard scatter-adds are integer, so the sum
             # over shards is bit-exact vs the single-shard path.
             owners = self.runtime.part.owner(pairs[:, 0])
+            shards = [
+                pairs[owners == rank] for rank in range(self.runtime.p)
+            ]
+            if spmd:
+                return self._delta6_spmd(shards, d_adj, delta6, sign=sign)
             total = 0
-            for rank in np.unique(owners):
-                shard = pairs[owners == rank]
+            for rank, shard in enumerate(shards):
+                if shard.shape[0] == 0:
+                    continue
                 total += self._delta6_for_shard(
                     shard, d_adj, delta6, sign=sign
                 )
-                self.shard_pairs[int(rank)] += shard.shape[0]
+                self.shard_pairs[rank] += shard.shape[0]
             return total
         n = self._delta6_for_shard(pairs, d_adj, delta6, sign=sign)
         self.shard_pairs[0] += n
         return n
 
-    def _delta6_for_shard(
+    def _delta6_spmd(
         self,
-        pairs: np.ndarray,
+        shards,
         d_adj: Dict[int, np.ndarray],
         delta6: np.ndarray,
         *,
         sign: int,
     ) -> int:
-        """One shard's worth of batched intersections (see caller)."""
+        """Device-parallel variant of the per-shard loop: every shard's
+        old∩old counts run as ONE rank-sharded ``shard_map`` call — rows
+        owned by the executing rank (or resident in the device tier's
+        mirror) stay rank-local, remote rows ship owner -> requester
+        through the collective — then the per-shard host math (masks,
+        wedge corrections, scatters) proceeds unchanged against those
+        counts. The engine's kernel-vs-mask cross-check still runs, so
+        SPMD counts are verified against the host membership masks on
+        every batch."""
+        from ..distributed.spmd_runtime import ShardWork
+
+        rt = self.runtime
+        store = self.store
+        empty = np.zeros(0, np.int64)
+        rowdata = [None] * rt.p
+        works = []
+        for rank, shard in enumerate(shards):
+            if shard.shape[0] == 0:
+                works.append(ShardWork(rank, empty, empty, {}))
+                continue
+            rd = self._shard_rows(shard)
+            rowdata[rank] = rd
+            rows_u, rows_v, res_u, res_v, w_old = rd
+            u, v = shard[:, 0], shard[:, 1]
+            held: Dict[int, np.ndarray] = {}
+            fetched: List[int] = []
+            resident = set(u[res_u].tolist()) | set(v[res_v].tolist())
+            for x in np.unique(np.concatenate([u, v])):
+                x = int(x)
+                if x in resident:
+                    # content the loop path would read: the device
+                    # tier's persistent mirror row, not a store merge
+                    slot = int(rt.device.slot_of(x))
+                    w_true = int(rt.device.widths[slot])
+                    held[x] = rt.device.host_rows(
+                        np.array([slot])
+                    )[0, :w_true].copy()
+                elif int(rt.part.owner(x)) == rank:
+                    held[x] = np.asarray(store.row(x))
+                else:
+                    fetched.append(x)
+            works.append(
+                ShardWork(
+                    rank,
+                    u.astype(np.int64),
+                    v.astype(np.int64),
+                    held,
+                    fetched,
+                )
+            )
+        counts, _unit = self.spmd.run(works, store)
+        total = 0
+        for rank, shard in enumerate(shards):
+            if shard.shape[0] == 0:
+                continue
+            total += self._delta6_for_shard(
+                shard,
+                d_adj,
+                delta6,
+                sign=sign,
+                rowdata=rowdata[rank],
+                oo_counts=counts[rank],
+            )
+            self.shard_pairs[rank] += shard.shape[0]
+        return total
+
+    def _shard_rows(self, pairs: np.ndarray):
+        """Materialize one shard's old-neighborhood rows (device-tier
+        mirror rows for resident endpoints, store merges for the rest)
+        with the host-materialization ledger updates. Returns
+        ``(rows_u, rows_v, res_u, res_v, w_old)``."""
         store = self.store
         sent = store.n
         k = pairs.shape[0]
         u, v = pairs[:, 0], pairs[:, 1]
-
         w_old = max(int(store.degrees[np.concatenate([u, v])].max()), 1)
-        w_new = max(max(len(r) for r in d_adj.values()), 1)
         dev = self.runtime.device if self.runtime is not None else None
         if dev is not None:
             # resident hub rows come from the tier's persistent mirror
@@ -313,13 +413,48 @@ class StreamingLCCEngine:
             both = np.concatenate([u, v])
             self.oo_host_rows += int(both.size)
             self.oo_host_bytes += int(store.degrees[both].sum()) * 4
+        return rows_u, rows_v, res_u, res_v, w_old
+
+    def _delta6_for_shard(
+        self,
+        pairs: np.ndarray,
+        d_adj: Dict[int, np.ndarray],
+        delta6: np.ndarray,
+        *,
+        sign: int,
+        rowdata=None,
+        oo_counts: Optional[np.ndarray] = None,
+    ) -> int:
+        """One shard's worth of batched intersections (see caller).
+        ``oo_counts`` injects old∩old counts computed elsewhere (the
+        SPMD executor) — they are still cross-checked against the host
+        membership masks below."""
+        store = self.store
+        sent = store.n
+        k = pairs.shape[0]
+        u, v = pairs[:, 0], pairs[:, 1]
+
+        if rowdata is None:
+            rowdata = self._shard_rows(pairs)
+        rows_u, rows_v, res_u, res_v, w_old = rowdata
+        dev = self.runtime.device if self.runtime is not None else None
+        w_new = max(max(len(r) for r in d_adj.values()), 1)
         rows_du = _padded_from_dict(d_adj, u, w_new, sent)
         rows_dv = _padded_from_dict(d_adj, v, w_new, sent)
 
         # old ∩ old — the wide hot path: Pallas kernel for the counts,
         # membership masks for the identities of the closing vertices.
         mask_oo = delta_intersect_masks(rows_u, rows_v, sentinel=sent)
-        if self.use_kernel:
+        if oo_counts is not None:
+            c_oo = np.asarray(oo_counts, np.int64)
+            assert np.array_equal(c_oo, mask_oo.sum(1)), (
+                "SPMD counts disagree with membership masks"
+            )
+            if dev is not None:
+                self.oo_resident_pairs += int(
+                    np.count_nonzero(res_u | res_v)
+                )
+        elif self.use_kernel:
             c_oo = self._oo_counts(
                 u, v, rows_u, rows_v, res_u, res_v, dev, sent
             )

@@ -37,8 +37,8 @@ def test_engine_p1_hybrid_matches():
 
 
 MULTIDEV_SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+from repro.distributed.spmd_runtime import ensure_host_devices
+ensure_host_devices(8)  # preserves external XLA_FLAGS; must precede jax init
 import json
 import numpy as np
 from repro.graphs.datasets import powerlaw_graph

@@ -62,8 +62,8 @@ def test_moe_capacity_drops_bounded():
 
 
 LOCAL_EP_SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+from repro.distributed.spmd_runtime import ensure_host_devices
+ensure_host_devices(8)  # preserves external XLA_FLAGS; must precede jax init
 import json
 import numpy as np
 import jax, jax.numpy as jnp

@@ -1,0 +1,265 @@
+"""SPMD execution of the sharded runtime's rank views.
+
+In-process: the executor vs a numpy oracle and the loop-vs-spmd
+field-for-field property at p=1 (the suite sees one device). Multi
+device: a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8
+(jax pins the device count at first init, and the rest of the suite must
+see 1 device) runs the same property at p in {4, 8}, with and without
+the device-resident tier — answers, per-rank cache stats, serve matrix,
+coherence ledgers, and residency stats must all agree, and the measured
+collective traffic must equal the modeled serve-matrix delta.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# --------------------------------------------------------------------------
+# executor vs oracle (p=1 in-process)
+# --------------------------------------------------------------------------
+class _FakeStore:
+    def __init__(self, rows):
+        self.rows = rows
+
+    def row(self, v):
+        return self.rows[int(v)]
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_executor_matches_oracle_p1(use_kernel):
+    from repro.core.partition import partition_1d
+    from repro.distributed.spmd_runtime import (
+        ShardWork,
+        SpmdIntersectExecutor,
+    )
+
+    rng = np.random.default_rng(3)
+    n = 32
+    rows = {
+        v: np.sort(
+            rng.choice(n, size=int(rng.integers(0, 9)), replace=False)
+        ).astype(np.int32)
+        for v in range(n)
+    }
+    store = _FakeStore(rows)
+    part = partition_1d(n, 1)
+    a = rng.integers(0, n, size=20).astype(np.int64)
+    b = rng.integers(0, n, size=20).astype(np.int64)
+    held = {int(v): rows[int(v)] for v in np.unique(np.concatenate([a, b]))}
+    ex = SpmdIntersectExecutor(part, n, use_kernel=use_kernel)
+    counts, unit = ex.run(
+        [ShardWork(0, a, b, held)], store
+    )
+    want = np.array(
+        [
+            len(np.intersect1d(rows[int(x)], rows[int(y)]))
+            for x, y in zip(a, b)
+        ],
+        np.int64,
+    )
+    assert np.array_equal(counts[0], want)
+    assert unit.rows_shipped.sum() == 0  # p=1: nothing is remote
+
+
+def test_executor_empty_unit_is_free():
+    from repro.core.partition import partition_1d
+    from repro.distributed.spmd_runtime import (
+        ShardWork,
+        SpmdIntersectExecutor,
+    )
+
+    part = partition_1d(16, 1)
+    ex = SpmdIntersectExecutor(part, 16)
+    z = np.zeros(0, np.int64)
+    counts, unit = ex.run([ShardWork(0, z, z, {})], _FakeStore({}))
+    assert counts[0].size == 0 and unit.n_collectives == 0
+
+
+def test_ensure_host_devices_preserves_existing_flags(monkeypatch):
+    from repro.distributed.spmd_runtime import ensure_host_devices
+
+    monkeypatch.setenv("XLA_FLAGS", "--xla_foo=7")
+    ensure_host_devices(1)
+    flags = os.environ["XLA_FLAGS"]
+    assert "--xla_foo=7" in flags  # user flag survived
+    assert "--xla_force_host_platform_device_count=1" in flags
+    # an explicit external device-count directive always wins
+    monkeypatch.setenv(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=1 --xla_bar=2"
+    )
+    ensure_host_devices(1)
+    assert os.environ["XLA_FLAGS"] == (
+        "--xla_force_host_platform_device_count=1 --xla_bar=2"
+    )
+
+
+# --------------------------------------------------------------------------
+# property: loop-mode and spmd-mode executions agree field-for-field
+# --------------------------------------------------------------------------
+def _provider_stats(runtime):
+    return [dataclasses.asdict(s) for s in runtime.stats]
+
+
+def _run_serving(execution, p, seed, device_slots=0):
+    from repro.graphs.rmat import rmat_graph
+    from repro.serving import LiveQueryService
+    from repro.serving.workload import read_write_stream
+
+    csr = rmat_graph(7, 8, seed=seed)
+    svc = LiveQueryService(
+        csr,
+        p=p,
+        cross_rank=True,
+        execution=execution,
+        device_slots=device_slots,
+        device_width=256,
+    )
+    results = []
+    for ev in read_write_stream(
+        lambda: svc.store.degrees,
+        csr.n,
+        n_events=10,
+        write_frac=0.3,
+        queries_per_event=24,
+        updates_per_event=24,
+        kind="zipf",
+        seed=seed,
+    ):
+        if ev.is_update:
+            svc.apply_updates(ev.update)
+        else:
+            results.extend(svc.scheduler.run(ev.queries))
+    svc.verify()
+    return svc, results
+
+
+def _serving_agrees(p, seed, device_slots=0):
+    svc_l, r_l = _run_serving("loop", p, seed, device_slots)
+    svc_s, r_s = _run_serving("spmd", p, seed, device_slots)
+    assert len(r_l) == len(r_s) and len(r_l) > 0
+    for a, b in zip(r_l, r_s):
+        assert a.query == b.query and a.value == b.value
+        assert (a.ids is None) == (b.ids is None)
+        if a.ids is not None:
+            assert np.array_equal(a.ids, b.ids)
+    # per-rank cache stats, serve matrix, coherence ledger: identical
+    assert _provider_stats(svc_l.runtime) == _provider_stats(svc_s.runtime)
+    assert np.array_equal(svc_l.runtime.serve_rows, svc_s.runtime.serve_rows)
+    assert (
+        svc_l.runtime.invalidations_sent == svc_s.runtime.invalidations_sent
+    )
+    assert svc_l.engine.n_pairs_total == svc_s.engine.n_pairs_total
+    assert svc_l.engine.n_pairs_raw == svc_s.engine.n_pairs_raw
+    assert svc_l.engine.n_pairs_resident == svc_s.engine.n_pairs_resident
+    if device_slots:
+        assert dataclasses.asdict(svc_l.runtime.device.stats) == (
+            dataclasses.asdict(svc_s.runtime.device.stats)
+        )
+    # measured collective traffic == modeled serve matrix (cumulative)
+    led = svc_s.engine.spmd.ledger
+    assert np.array_equal(led.rows_shipped, svc_s.runtime.serve_rows)
+    assert led.bytes_payload == sum(
+        s.bytes_fetched for s in svc_s.runtime.stats
+    )
+    return True
+
+
+def _run_streaming(execution, p, seed, device_slots=0):
+    from repro.graphs.rmat import rmat_stream
+    from repro.streaming import StreamingCacheCoherence, StreamingLCCEngine
+
+    n = 1 << 7
+    coh = StreamingCacheCoherence(
+        n, np.zeros(n, np.int64), p=p, cache_rows=32
+    )
+    eng = StreamingLCCEngine.empty(n, coherence=coh, execution=execution)
+    if device_slots:
+        eng.runtime.enable_device_tier(device_slots, 256)
+    batch_results = []
+    for batch in rmat_stream(
+        7, 8, batch_size=256, delete_frac=0.2, seed=seed
+    ):
+        batch_results.append(eng.apply_batch(batch))
+    eng.verify()
+    return eng, batch_results
+
+def _streaming_agrees(p, seed, device_slots=0):
+    e_l, br_l = _run_streaming("loop", p, seed, device_slots)
+    e_s, br_s = _run_streaming("spmd", p, seed, device_slots)
+    assert br_l == br_s  # BatchResult dataclasses, field-for-field
+    assert np.array_equal(e_l.t, e_s.t)
+    assert np.array_equal(e_l.lcc, e_s.lcc)
+    assert np.array_equal(e_l.shard_pairs, e_s.shard_pairs)
+    assert e_l.oo_host_rows == e_s.oo_host_rows
+    assert e_l.oo_host_bytes == e_s.oo_host_bytes
+    assert e_l.oo_resident_pairs == e_s.oo_resident_pairs
+    assert _provider_stats(e_l.runtime) == _provider_stats(e_s.runtime)
+    if device_slots:
+        assert dataclasses.asdict(e_l.runtime.device.stats) == (
+            dataclasses.asdict(e_s.runtime.device.stats)
+        )
+    assert e_s.spmd.ledger.n_pairs == e_s.delta_pairs_total
+    return True
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_serving_loop_vs_spmd_p1(seed):
+    assert _serving_agrees(1, seed)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_streaming_loop_vs_spmd_p1(seed):
+    assert _streaming_agrees(1, seed)
+
+
+def test_streaming_loop_vs_spmd_p1_device_tier():
+    assert _streaming_agrees(1, 0, device_slots=32)
+
+
+# --------------------------------------------------------------------------
+# multi-device: the same property at p in {4, 8} on 8 host devices
+# --------------------------------------------------------------------------
+MULTIDEV_SCRIPT = r"""
+from repro.distributed.spmd_runtime import ensure_host_devices
+ensure_host_devices(8)  # preserves external XLA_FLAGS; must precede jax init
+import json
+import sys
+sys.path.insert(0, {test_dir!r})
+from test_spmd_runtime import _serving_agrees, _streaming_agrees
+
+out = {{}}
+for p in (4, 8):
+    out[f"serving_p{{p}}"] = _serving_agrees(p, seed=0)
+    out[f"streaming_p{{p}}"] = _streaming_agrees(p, seed=0)
+out["serving_p4_seed1"] = _serving_agrees(4, seed=1)
+out["streaming_p4_seed1"] = _streaming_agrees(4, seed=1)
+out["serving_p4_device"] = _serving_agrees(4, seed=0, device_slots=32)
+out["streaming_p4_device"] = _streaming_agrees(4, seed=0, device_slots=32)
+print(json.dumps(out))
+"""
+
+
+def test_multidevice_loop_vs_spmd():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    script = MULTIDEV_SCRIPT.format(
+        test_dir=os.path.dirname(os.path.abspath(__file__))
+    )
+    r = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=1200,
+    )
+    assert r.returncode == 0, f"stderr:\n{r.stderr[-3000:]}"
+    res = json.loads(r.stdout.strip().splitlines()[-1])
+    assert res and all(res.values()), res
