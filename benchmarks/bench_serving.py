@@ -69,6 +69,58 @@ def _serve(csr, store, queries, *, window, cached, p=4, cache_bytes=1 << 20):
     }
 
 
+def _trace_overhead(csr, store, queries, *, window, reps):
+    """Cost of the observability hooks.
+
+    Two numbers, different stability classes:
+
+    - ``trace_disabled_overhead_frac`` — the estimate that gates: the
+      microbenched cost of one disabled ``span()`` call (a module-global
+      None check returning a shared null object) times the spans one
+      serve emits, over the serve wall. Deterministic enough for CI.
+    - ``trace_enabled_overhead_frac`` — median enabled vs disabled
+      wall delta. Informational only; wall noise on shared runners
+      swamps single-digit percents.
+    """
+    from repro.obs import trace as obs_trace
+
+    walls_off = sorted(
+        _serve(csr, store, queries, window=window, cached=True)["wall_s"]
+        for _ in range(reps)
+    )
+    tracer = obs_trace.enable_tracing()
+    try:
+        walls_on = sorted(
+            _serve(csr, store, queries, window=window, cached=True)["wall_s"]
+            for _ in range(reps)
+        )
+    finally:
+        obs_trace.disable_tracing()
+    spans_per_run = len(tracer) / reps
+
+    n = 200_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with obs_trace.span("fetch_rows", rank=0, cat="bench", n=1):
+            pass
+    disabled_span_ns = (time.perf_counter() - t0) / n * 1e9
+
+    wall_off = walls_off[reps // 2]
+    wall_on = walls_on[reps // 2]
+    disabled_frac = (disabled_span_ns * 1e-9 * spans_per_run
+                     / max(wall_off, 1e-9))
+    return {
+        "wall_disabled_s": round(wall_off, 4),
+        "wall_enabled_s": round(wall_on, 4),
+        "trace_enabled_overhead_frac": round(
+            wall_on / max(wall_off, 1e-9) - 1.0, 4),
+        "disabled_span_ns": round(disabled_span_ns, 1),
+        "n_spans_enabled": round(spans_per_run, 1),
+        "trace_disabled_overhead_frac": round(disabled_frac, 6),
+        "trace_overhead_ok": bool(disabled_frac < 0.03),
+    }
+
+
 def run(quick: bool = True):
     scale = 9 if quick else 11
     edge_factor = 8
@@ -109,6 +161,32 @@ def run(quick: bool = True):
         )
         out[f"cache_comm_reduction_{kind}"] = round(red, 4)
         out[f"hit_rate_{kind}"] = cached["hit_rate"]
+
+    # 3. observability: tracer overhead gate + one traced run folded
+    # into the suite metrics snapshot (run.py writes it next to --out)
+    out.update(_trace_overhead(csr, store, qs_zipf, window=windows[-1],
+                               reps=3 if quick else 5))
+    from repro.obs import trace as obs_trace
+    from repro.obs.metrics import (
+        MetricRegistry,
+        fold_trace,
+        record_latency,
+        record_provider_stats,
+    )
+
+    provider = CacheBackedRowProvider(store, p=4, capacity_bytes=1 << 20)
+    engine = QueryEngine(store, provider, use_kernel=False)
+    sched = MicrobatchScheduler(engine, max_batch=windows[-1])
+    tracer = obs_trace.enable_tracing()
+    try:
+        sched.run(qs_zipf)
+    finally:
+        obs_trace.disable_tracing()
+    reg = MetricRegistry()
+    record_provider_stats(reg, provider.stats, rank=0)
+    record_latency(reg, sched.recorder)
+    fold_trace(reg, tracer)
+    out["_metrics_snapshot"] = reg.to_dict()
     return out
 
 

@@ -42,6 +42,7 @@ METRICS = {
 BOOLEANS = [
     "spmd_scaling.model_agreement_all",
     "schedule_rebuild.bit_exact",
+    "serving_queries.trace_overhead_ok",
 ]
 
 

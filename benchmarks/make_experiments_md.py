@@ -1,7 +1,15 @@
-"""Assemble EXPERIMENTS.md from results/ artifacts (reproducible report)."""
+"""Assemble EXPERIMENTS.md from results/ artifacts (reproducible report).
+
+Every input is optional: a missing template, missing roofline dry-run
+records, or a missing benchmarks.json degrade to an inline note instead
+of crashing, so the report can be regenerated at any point in the
+repo's life. The per-phase time/bytes tables come from the labeled
+metrics snapshot ``benchmarks/run.py`` writes next to ``--out``
+(``results/benchmarks.metrics.json``) — see docs/observability.md for
+the span/metric taxonomy behind them.
+"""
 from __future__ import annotations
 
-import glob
 import json
 import os
 import sys
@@ -10,6 +18,74 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.bench_roofline import analyze_record, markdown_table, run as roofline_run  # noqa: E402
+
+DEFAULT_TMPL = """\
+# Experiments
+
+Auto-assembled by `python benchmarks/make_experiments_md.py` from
+`results/` artifacts. Regenerate after `python -m benchmarks.run`.
+
+## Roofline (dry-run cells)
+
+{{ROOFLINE_TABLE}}
+
+```json
+{{ROOFLINE_SUMMARY}}
+```
+
+## Optimization deltas
+
+{{OPT_TABLE}}
+
+## Intersection methods (Table III)
+
+```json
+{{TABLE3}}
+```
+
+## Cache-size sweep (Fig. 7)
+
+```json
+{{FIG7}}
+```
+
+## Score policies (Fig. 8)
+
+```json
+{{FIG8}}
+```
+
+## Strong scaling, modeled (Figs. 9/10)
+
+```json
+{{FIG9}}
+```
+
+## Strong scaling, measured on 8 host devices
+
+```json
+{{FIG9M}}
+```
+
+## Degree/reuse correlation (Figs. 1/4/5)
+
+```json
+{{REUSE}}
+```
+
+## Shared-memory scaling (Fig. 6)
+
+```json
+{{FIG6}}
+```
+
+## Per-phase time/bytes (observability snapshot)
+
+Folded from `--trace` spans via `repro.obs.metrics.fold_trace`; the
+phase taxonomy is documented in docs/observability.md.
+
+{{PHASE_TABLES}}
+"""
 
 
 def load(path):
@@ -24,7 +100,10 @@ def opt_delta_table(cells, opt_dirs):
         "|---|---|---|---|---|---|",
     ]
     for tag, label in cells:
-        b = analyze_record(load(f"results/dryrun/{tag}.json"))
+        base_path = f"results/dryrun/{tag}.json"
+        if not os.path.exists(base_path):
+            continue
+        b = analyze_record(load(base_path))
         best = None
         best_dir = None
         for d in opt_dirs:
@@ -44,11 +123,50 @@ def opt_delta_table(cells, opt_dirs):
             f"| {tag} | bound | {b['roofline_bound_s']:.3f}s "
             f"| {best['roofline_bound_s']:.3f}s | **{x:.1f}x** | {best_dir} ({label}) |"
         )
+    if len(lines) == 2:
+        return "(no dry-run optimization records under results/)"
     return "\n".join(lines)
 
 
+def phase_tables(path="results/benchmarks.metrics.json"):
+    """Per-suite markdown tables of per-phase wall time / calls / bytes,
+    read from the ``phase_time_s``/``phase_calls``/``phase_bytes``
+    counters of each suite's metrics snapshot."""
+    if not os.path.exists(path):
+        return ("(no metrics snapshot — `python -m benchmarks.run` writes "
+                "results/benchmarks.metrics.json)")
+    blocks = []
+    for suite, snap in sorted(load(path).items()):
+        rows = {}
+        for c in snap.get("counters", []):
+            if c["name"] in ("phase_time_s", "phase_calls", "phase_bytes"):
+                d = rows.setdefault(c["phase"], {})
+                d[c["name"]] = d.get(c["name"], 0.0) + c["value"]
+        if not rows:
+            continue
+        lines = [
+            f"**{suite}**", "",
+            "| phase | calls | time (ms) | bytes |",
+            "|---|---|---|---|",
+        ]
+        for ph in sorted(rows, key=lambda p: -rows[p].get("phase_time_s", 0)):
+            d = rows[ph]
+            lines.append(
+                f"| `{ph}` | {d.get('phase_calls', 0):.0f} "
+                f"| {d.get('phase_time_s', 0.0) * 1e3:.2f} "
+                f"| {d.get('phase_bytes', 0):,.0f} |"
+            )
+        blocks.append("\n".join(lines))
+    return "\n\n".join(blocks) or "(snapshot has no per-phase counters)"
+
+
 def main():
-    roof = roofline_run("results/dryrun")
+    try:
+        roof = roofline_run("results/dryrun")
+        roofline_md = markdown_table(roof)
+        roofline_summary = json.dumps(roof["summary"], indent=1)
+    except Exception as e:  # noqa: BLE001 — report survives missing artifacts
+        roofline_md = roofline_summary = f"(no roofline dry-run records: {e})"
     bench = load("results/benchmarks.json") if os.path.exists(
         "results/benchmarks.json") else {}
 
@@ -67,12 +185,14 @@ def main():
     opt_dirs = ["dryrun_opt", "dryrun_opt2", "dryrun_opt3", "dryrun_opt4",
                 "dryrun_opt5", "dryrun_opt6", "dryrun_opt7"]
 
-    with open("EXPERIMENTS.tmpl.md") as f:
-        tmpl = f.read()
+    if os.path.exists("EXPERIMENTS.tmpl.md"):
+        with open("EXPERIMENTS.tmpl.md") as f:
+            tmpl = f.read()
+    else:
+        tmpl = DEFAULT_TMPL
 
-    out = tmpl.replace("{{ROOFLINE_TABLE}}", markdown_table(roof))
-    out = out.replace("{{ROOFLINE_SUMMARY}}",
-                      json.dumps(roof["summary"], indent=1))
+    out = tmpl.replace("{{ROOFLINE_TABLE}}", roofline_md)
+    out = out.replace("{{ROOFLINE_SUMMARY}}", roofline_summary)
     out = out.replace("{{OPT_TABLE}}", opt_delta_table(cells, opt_dirs))
 
     # benchmark extracts
@@ -91,6 +211,7 @@ def main():
     out = out.replace("{{FIG9M}}", get("strong_scaling_fig9_10.measured_8hostdev"))
     out = out.replace("{{REUSE}}", get("reuse_fig1_4_5.rows"))
     out = out.replace("{{FIG6}}", get("shared_scaling_fig6"))
+    out = out.replace("{{PHASE_TABLES}}", phase_tables())
 
     with open("EXPERIMENTS.md", "w") as f:
         f.write(out)

@@ -77,6 +77,20 @@ def main(argv=None):
         print(flush=True)
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    # suites may attach a labeled metrics snapshot (repro.obs) under
+    # "_metrics_snapshot"; split those into a sidecar so the results
+    # JSON stays diff-reviewable and the report can tabulate per-phase
+    # time/bytes from one place.
+    snapshots = {
+        name: r.pop("_metrics_snapshot")
+        for name, r in results.items()
+        if isinstance(r, dict) and "_metrics_snapshot" in r
+    }
+    if snapshots:
+        mpath = os.path.splitext(args.out)[0] + ".metrics.json"
+        with open(mpath, "w") as f:
+            json.dump(snapshots, f, indent=1)
+        print(f"wrote {mpath}")
     with open(args.out, "w") as f:
         json.dump(results, f, indent=1, default=str)
     print(f"wrote {args.out}")
@@ -174,6 +188,14 @@ def checklist(results):
             f"(hit rate {sv['hit_rate_zipf']:.0%})",
             sv["cache_comm_reduction_zipf"] > 0.2
             and sv["hit_rate_zipf"] > 0.2,
+        ))
+    if "trace_overhead_ok" in sv:
+        checks.append((
+            f"observability: disabled-tracer hook overhead "
+            f"{sv['trace_disabled_overhead_frac']:.2%} of serve wall "
+            f"({sv['disabled_span_ns']:.0f} ns/span x "
+            f"{sv['n_spans_enabled']:.0f} spans; target < 3%)",
+            sv["trace_overhead_ok"],
         ))
     sp = results.get("spmd_scaling", {})
     if "model_agreement_all" in sp:

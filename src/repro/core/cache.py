@@ -30,6 +30,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..obs import trace as obs_trace
+
 __all__ = [
     "NetworkModel",
     "CacheStats",
@@ -237,6 +239,9 @@ class ClampiCache:
             if addr is not None:
                 self.entries[key] = _Entry(key, addr, size, self.clock, score)
                 self.stats.comm_time += self.net.insert_cost
+                if obs_trace.fine_enabled():  # per-entry; fine mode only
+                    obs_trace.instant("cache_admit", cat="cache",
+                                      key=key, bytes=size)
                 return
             if not self.entries:
                 return
@@ -256,6 +261,9 @@ class ClampiCache:
         del self.entries[v.key]
         self._dealloc(v.addr, v.size)
         self.stats.evictions += 1
+        if obs_trace.fine_enabled():  # per-entry; fine mode only
+            obs_trace.instant("cache_evict", cat="cache",
+                              key=v.key, bytes=v.size)
         return True
 
     def _maybe_resize(self) -> None:

@@ -38,6 +38,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs import trace as obs_trace
 from .cache import (
     CacheStats,
     ClampiCache,
@@ -94,8 +95,20 @@ class ProviderStats:
 
     @property
     def hit_rate(self) -> float:
+        """Host-cache hit rate over host-cache *probes*. Device-tier
+        hits resolve above the host cache and never probe it, so they
+        belong in neither numerator nor denominator (using raw
+        ``remote_reads`` would deflate the rate whenever the device
+        tier is on)."""
+        probes = self.cache_hits + self.cache_misses
+        return self.cache_hits / probes if probes else 0.0
+
+    @property
+    def remote_hit_rate(self) -> float:
+        """Fraction of remote reads served without moving bytes, by
+        either tier (device-resident or host-cache hit)."""
         r = self.remote_reads
-        return self.cache_hits / r if r else 0.0
+        return (self.cache_hits + self.device_hits) / r if r else 0.0
 
 
 class ShardedRuntime:
@@ -246,6 +259,16 @@ class ShardedRuntime:
         ``serve_rows``, so the measured collective traffic reconciles
         against the model without a second bookkeeping path."""
         rank = int(rank)
+        with obs_trace.span("fetch_rows", rank=rank, cat="runtime",
+                            n=len(vertices)):
+            return self._fetch_rows_impl(rank, vertices, record)
+
+    def _fetch_rows_impl(
+        self,
+        rank: int,
+        vertices: Sequence[int],
+        record: Optional[List[FetchEvent]],
+    ) -> Dict[int, np.ndarray]:
         st = self.stats[rank]
         out: Dict[int, np.ndarray] = {}
         store = self.store
@@ -345,6 +368,11 @@ class ShardedRuntime:
         their cached payloads on exactly the ranks that hold them.
         Returns the number of host-cache entries dropped."""
         changed = [int(v) for v in changed_ids]
+        with obs_trace.span("cache_invalidate", cat="coherence",
+                            n=len(changed)):
+            return self._invalidate_impl(changed)
+
+    def _invalidate_impl(self, changed: List[int]) -> int:
         # both tiers observe every mutation: the device tier patches the
         # touched resident rows in place (or evicts on width overflow)
         # and re-scores admission, so a later resident hit is fresh.

@@ -38,6 +38,7 @@ from typing import Iterable, Optional, Tuple
 import numpy as np
 
 from ..kernels.bucketing import pow2_ceil
+from ..obs import trace as obs_trace
 
 __all__ = ["ResidencyStats", "ResidencyManager"]
 
@@ -101,6 +102,11 @@ class ResidencyManager:
         """Select the hot set from scratch: top-``slots`` eligible
         vertices by degree score (stable tie-break by vertex id, same
         rule as ``build_static_degree_cache``) and upload their rows."""
+        with obs_trace.span("residency_rebuild", cat="device",
+                            slots=self.slots):
+            self._rebuild_impl()
+
+    def _rebuild_impl(self) -> None:
         score = self._eligible_scores()
         order = np.lexsort((np.arange(self.n), score))
         order = order[score[order] > 0]
@@ -258,6 +264,11 @@ class ResidencyManager:
         changed = np.unique(np.asarray(list(changed_ids), np.int64))
         if changed.size == 0:
             return 0
+        with obs_trace.span("residency_patch", cat="device",
+                            n=changed.size):
+            return self._notify_batch_impl(changed)
+
+    def _notify_batch_impl(self, changed: np.ndarray) -> int:
         deg = np.asarray(self.store.degrees, np.int64)
         touched: list[int] = []
         # 1. resident mutations: patch in place or evict on overflow

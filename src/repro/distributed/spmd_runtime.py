@@ -54,6 +54,7 @@ from ..core.compat import shard_map
 from ..core.intersect import count_bsearch_jnp
 from ..kernels.bucketing import pow2_ceil
 from ..kernels.intersect_count import intersect_count
+from ..obs import trace as obs_trace
 
 __all__ = [
     "CollectiveLedger",
@@ -298,6 +299,12 @@ class SpmdIntersectExecutor:
         if n_pairs == 0 and n_fetched == 0:
             return [np.zeros(0, np.int64) for _ in range(p)], unit
 
+        # spans: host-side packing vs. the device collective, as two
+        # sibling phases (manual open/close keeps the hot path unindented)
+        _pack = obs_trace.span("spmd_pack", cat="spmd", n_pairs=n_pairs,
+                               n_fetched=n_fetched)
+        _pack.__enter__()
+
         # serve lists: ship[k][j] = rows owner k sends requester j, in
         # requester fetch order (mirrors the serve_rows accounting).
         ship: List[List[List[int]]] = [[[] for _ in range(p)] for _ in range(p)]
@@ -399,16 +406,22 @@ class SpmdIntersectExecutor:
             mask[j, :e] = True
 
         fn = self._fn(h_buf, s_max, w, e_pad, be)
-        t0 = time.perf_counter()
-        out = fn(rows_arr, serve_idx, a_idx, b_idx, mask)
-        out = np.asarray(jax.block_until_ready(out), np.int64)
-        unit.device_wall_s += time.perf_counter() - t0
+        _pack.__exit__(None, None, None)
+        # padded wire bytes, self-chunk excluded (it never leaves the
+        # device) — the padding overhead the model does not charge.
+        wire_bytes = p * (p - 1) * s_max * w * ID_BYTES
+        with obs_trace.span(
+            "all_to_all", cat="spmd", pairs=n_pairs,
+            payload_bytes=int(unit.bytes_payload), wire_bytes=wire_bytes,
+        ):
+            t0 = time.perf_counter()
+            out = fn(rows_arr, serve_idx, a_idx, b_idx, mask)
+            out = np.asarray(jax.block_until_ready(out), np.int64)
+            unit.device_wall_s += time.perf_counter() - t0
 
         unit.n_collectives += 1
         unit.n_pairs += n_pairs
-        # padded wire bytes, self-chunk excluded (it never leaves the
-        # device) — the padding overhead the model does not charge.
-        unit.bytes_on_wire += p * (p - 1) * s_max * w * ID_BYTES
+        unit.bytes_on_wire += wire_bytes
         self.ledger.add(unit)
         counts = [out[j, : shards[j].pair_a.size] for j in range(p)]
         return counts, unit

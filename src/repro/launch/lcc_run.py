@@ -31,7 +31,16 @@ def main(argv=None):
     ap.add_argument("--method", default="hybrid",
                     choices=["bsearch", "pairwise", "hybrid"])
     ap.add_argument("--verify", action="store_true")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export a Chrome-trace span timeline of the run "
+                         "(open at ui.perfetto.dev or chrome://tracing)")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="write the labeled metrics snapshot (per-rank "
+                         "cache stats + modeled comm + per-phase time)")
     args = ap.parse_args(argv)
+    from ..obs import trace as obs_trace
+
+    tracer = obs_trace.enable_tracing() if args.trace else None
 
     from ..core.async_engine import lcc_pipelined
     from ..core.cache import build_static_degree_cache
@@ -53,7 +62,9 @@ def main(argv=None):
     prob = build_sharded_problem(csr, p, n_rounds=args.n_rounds, cache=cache)
     t, lcc = lcc_pipelined(prob, method=args.method)  # compile
     t0 = time.perf_counter()
-    t, lcc = lcc_pipelined(prob, method=args.method)
+    with obs_trace.span("intersect_kernel", cat="epoch",
+                        rounds=prob.n_rounds):
+        t, lcc = lcc_pipelined(prob, method=args.method)
     dt = time.perf_counter() - t0
     total_t = int(t.sum()) // 3
     print(f"triangles={total_t}  wall={dt * 1e3:.1f} ms  "
@@ -71,16 +82,47 @@ def main(argv=None):
         assert np.array_equal(got, want), "MISMATCH vs reference"
         print("verified exact vs single-node reference")
 
-    st = simulate_rma_lcc(
-        csr, p,
-        adj_cache_bytes=csr.csr_nbytes() // 4,
-        offsets_cache_bytes=csr.n * 2,
-        use_degree_score=True,
-    )
+    with obs_trace.span("delta_replay", cat="epoch"):
+        st = simulate_rma_lcc(
+            csr, p,
+            adj_cache_bytes=csr.csr_nbytes() // 4,
+            offsets_cache_bytes=csr.n * 2,
+            use_degree_score=True,
+        )
     hits = sum(s.hits for s in st.adj_stats)
     gets = sum(s.gets for s in st.adj_stats)
     print(f"CLaMPI-sim: adj hit rate {hits / max(gets, 1):.1%}, "
           f"modeled comm {st.makespan * 1e3:.2f} ms")
+    if args.metrics:
+        from ..obs.metrics import (
+            MetricRegistry,
+            fold_trace,
+            imbalance,
+            record_cache_stats,
+        )
+
+        reg = MetricRegistry()
+        for k, s in enumerate(st.adj_stats):
+            record_cache_stats(reg, s, rank=k)
+        reg.counter("rma_bytes_modeled",
+                    float(prob.comm_bytes_per_round().sum()),
+                    tier="wire", phase="fetch_rows")
+        reg.counter("modeled_comm_s", float(st.makespan), tier="wire")
+        reg.counter("epoch_wall_s", float(dt), phase="intersect_kernel")
+        reg.gauge("cache_get_imbalance",
+                  imbalance([s.gets for s in st.adj_stats]),
+                  tier="host_cache")
+        if tracer is not None:
+            fold_trace(reg, tracer)
+        snap = reg.to_dict()
+        reg.save(args.metrics)
+        print(f"metrics: {len(snap['counters'])} counters, "
+              f"{len(snap['gauges'])} gauges -> {args.metrics}")
+    if tracer is not None:
+        obs_trace.disable_tracing()
+        tracer.export(args.trace)
+        print(f"trace: {len(tracer)} events -> {args.trace} "
+              "(open at ui.perfetto.dev)")
     return 0
 
 

@@ -87,6 +87,15 @@ def main(argv=None):
                     help="check every point query vs a from-scratch recount")
     ap.add_argument("--smoke", action="store_true",
                     help="small graph, verification on")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export a Chrome-trace span timeline of the run "
+                         "(open at ui.perfetto.dev or chrome://tracing)")
+    ap.add_argument("--trace-fine", action="store_true",
+                    help="with --trace: also emit per-cache-entry "
+                         "admit/evict instants (bigger trace)")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="write the labeled metrics snapshot (all ledgers "
+                         "+ per-phase time; see docs/observability.md)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if not 0.0 <= args.write_frac <= 0.9:
@@ -98,6 +107,13 @@ def main(argv=None):
     if args.spmd and args.ranks <= 0:
         ap.error("--spmd executes the cross-rank views on devices; "
                  "pass --ranks p")
+    if args.trace_fine and not args.trace:
+        ap.error("--trace-fine needs --trace")
+    tracer = None
+    if args.trace:
+        from ..obs import trace as obs_trace
+
+        tracer = obs_trace.enable_tracing(fine=args.trace_fine)
     if args.smoke:
         args.scale = min(args.scale, 8)
         args.queries = min(args.queries, 256)
@@ -262,6 +278,24 @@ def main(argv=None):
         svc.verify()
         print(f"verified: {n_verified} point queries bit-exact vs recount, "
               "0 stale cached rows")
+    if args.metrics:
+        reg = svc.metrics_registry(tracer=tracer)
+        snap = reg.to_dict()
+        reg.save(args.metrics)
+        print(f"metrics: {len(snap['counters'])} counters, "
+              f"{len(snap['gauges'])} gauges, "
+              f"{len(snap['histograms'])} histograms -> {args.metrics}  "
+              f"[load imbalance "
+              f"{reg.get_gauge('load_imbalance', tier='host'):.2f}x, "
+              f"serve-matrix skew "
+              f"{reg.get_gauge('serve_matrix_skew', tier='wire'):.2f}x]")
+    if tracer is not None:
+        from ..obs import trace as obs_trace
+
+        obs_trace.disable_tracing()
+        tracer.export(args.trace)
+        print(f"trace: {len(tracer)} events -> {args.trace} "
+              "(open at ui.perfetto.dev)")
     return 0
 
 

@@ -82,8 +82,24 @@ def main(argv=None):
     ap.add_argument("--no-verify", action="store_true")
     ap.add_argument("--no-kernel", action="store_true",
                     help="skip the Pallas path (pure-numpy masks only)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export a Chrome-trace span timeline of the run "
+                         "(open at ui.perfetto.dev or chrome://tracing)")
+    ap.add_argument("--trace-fine", action="store_true",
+                    help="with --trace: also emit per-cache-entry "
+                         "admit/evict instants (bigger trace)")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="write the labeled metrics snapshot (all ledgers "
+                         "+ per-phase time; see docs/observability.md)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.trace_fine and not args.trace:
+        ap.error("--trace-fine needs --trace")
+    tracer = None
+    if args.trace:
+        from ..obs import trace as obs_trace
+
+        tracer = obs_trace.enable_tracing(fine=args.trace_fine)
     ranks = args.ranks if args.ranks is not None else args.p
     if args.spmd:
         # before anything initializes jax (the device count is locked at
@@ -245,6 +261,45 @@ def main(argv=None):
         print("final state verified bit-exact vs from-scratch recount"
               + (" (incl. maintained schedule)"
                  if args.maintain_schedule else ""))
+    if args.metrics:
+        from ..obs.metrics import (
+            MetricRegistry,
+            fold_trace,
+            imbalance,
+            record_coherence_report,
+            record_collective_ledger,
+            record_runtime,
+        )
+
+        reg = MetricRegistry()
+        record_runtime(reg, runtime)
+        record_coherence_report(reg, rep)
+        # streaming's load dimension is the sharded delta worklist
+        for k in range(ranks):
+            reg.counter("shard_pairs", int(eng.shard_pairs[k]), rank=k,
+                        tier="host", phase="intersect_kernel")
+        reg.gauge("shard_imbalance", imbalance(eng.shard_pairs),
+                  tier="host")
+        if args.spmd:
+            # measured wire traffic only — no reconciliation claim: the
+            # loop-path counterpart of these reads goes straight to the
+            # store, so the serve matrix models none of this traffic
+            record_collective_ledger(reg, eng.spmd.ledger)
+        if tracer is not None:
+            fold_trace(reg, tracer)
+        snap = reg.to_dict()
+        reg.save(args.metrics)
+        print(f"metrics: {len(snap['counters'])} counters, "
+              f"{len(snap['gauges'])} gauges -> {args.metrics}  "
+              f"[shard imbalance "
+              f"{reg.get_gauge('shard_imbalance', tier='host'):.2f}x]")
+    if tracer is not None:
+        from ..obs import trace as obs_trace
+
+        obs_trace.disable_tracing()
+        tracer.export(args.trace)
+        print(f"trace: {len(tracer)} events -> {args.trace} "
+              "(open at ui.perfetto.dev)")
     return 0
 
 

@@ -1,0 +1,25 @@
+"""Unified observability plane: span tracing + labeled metrics.
+
+- ``repro.obs.trace`` — near-zero-overhead nestable span tracer with a
+  Chrome-trace (Perfetto-viewable) exporter; no-op when disabled.
+- ``repro.obs.metrics`` — one ``(name, rank, tier, phase)``-labeled
+  registry with adapters over the existing stat ledgers and a
+  serializable snapshot.
+- ``repro.obs.validate`` — CLI + library checks for the exported
+  artifacts (Chrome-trace schema, span-tree nesting, cross-ledger
+  accounting invariants).
+
+See docs/observability.md for the taxonomy and usage.
+"""
+from . import trace
+from .metrics import MetricRegistry
+from .trace import Tracer, disable_tracing, enable_tracing, get_tracer
+
+__all__ = [
+    "trace",
+    "MetricRegistry",
+    "Tracer",
+    "enable_tracing",
+    "disable_tracing",
+    "get_tracer",
+]

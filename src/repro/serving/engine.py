@@ -34,6 +34,7 @@ import numpy as np
 
 from ..core.runtime import FetchEvent, ShardedRuntime
 from ..core.triangles import lcc_scores, triangles_per_vertex
+from ..obs import trace as obs_trace
 from ..kernels.bucketing import pack_rows, width_classes
 from ..kernels.delta_intersect import delta_intersect_masks
 from ..kernels.point_query import batched_pair_counts
@@ -96,7 +97,10 @@ class QueryEngine:
     # ---------------- point/batch execution ----------------
     def execute_batch(self, queries: Sequence[Query]) -> List[QueryResult]:
         prep = self.prepare_batch(queries)
-        counts = self._pair_counts(prep.u_lo, prep.u_hi, prep.rows)
+        rank = int(getattr(self.provider, "rank", -1))
+        with obs_trace.span("intersect_kernel", rank=rank, cat="serving",
+                            pairs=prep.u_lo.size):
+            counts = self._pair_counts(prep.u_lo, prep.u_hi, prep.rows)
         return self.finalize_batch(prep, counts)
 
     def prepare_batch(

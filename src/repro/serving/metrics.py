@@ -7,11 +7,17 @@ Shed accounting backs the admission-control policy: a bounded queue
 rejects work it cannot serve in time instead of letting every queued
 query's latency collapse. ``shed_rate`` = shed / (served + shed) — the
 fraction of offered load turned away, by reason.
+
+Latencies can carry an optional class label (``cls``, e.g. the query
+kind: ``"count"``/``"lcc"``/``"exists"``) so per-SLO-class breakdowns
+are possible: ``summary_by_class()`` returns one ``LatencySummary`` per
+class (wall clock is shared across classes, so per-class summaries
+report percentiles and shed counts but no throughput).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -37,20 +43,51 @@ class LatencySummary:
         }
 
 
+def _summarize(lat: np.ndarray, wall_s: float, shed: int) -> LatencySummary:
+    served = int(lat.size)
+    rate = shed / (served + shed) if (served + shed) else 0.0
+    if served == 0:
+        return LatencySummary(
+            0, wall_s, 0.0, 0.0, 0.0, 0.0, 0.0, shed, rate
+        )
+    p50, p90, p99 = np.percentile(lat, [50, 90, 99], method="lower")
+    return LatencySummary(
+        count=served,
+        wall_s=wall_s,
+        # no measured wall => no throughput claim (a tiny guard
+        # denominator would report ~1e12 qps instead of "unknown")
+        throughput_qps=served / wall_s if wall_s > 0 else 0.0,
+        p50_ms=float(p50) * 1e3,
+        p90_ms=float(p90) * 1e3,
+        p99_ms=float(p99) * 1e3,
+        max_ms=float(lat.max()) * 1e3,
+        shed=shed,
+        shed_rate=rate,
+    )
+
+
 class LatencyRecorder:
     def __init__(self):
         self._lat: List[float] = []
+        self._cls_lat: Dict[str, List[float]] = {}
         self.wall_s = 0.0
         self.sheds: Dict[str, int] = {}  # reason -> queries rejected
+        self._cls_sheds: Dict[str, int] = {}  # class -> queries rejected
 
-    def record(self, latency_s: float) -> None:
+    def record(self, latency_s: float, cls: Optional[str] = None) -> None:
         self._lat.append(float(latency_s))
+        if cls is not None:
+            self._cls_lat.setdefault(str(cls), []).append(float(latency_s))
 
     def record_wall(self, seconds: float) -> None:
         self.wall_s += float(seconds)
 
-    def record_shed(self, reason: str, n: int = 1) -> None:
+    def record_shed(self, reason: str, n: int = 1,
+                    cls: Optional[str] = None) -> None:
         self.sheds[reason] = self.sheds.get(reason, 0) + int(n)
+        if cls is not None:
+            cls = str(cls)
+            self._cls_sheds[cls] = self._cls_sheds.get(cls, 0) + int(n)
 
     @property
     def count(self) -> int:
@@ -60,25 +97,25 @@ class LatencyRecorder:
     def n_shed(self) -> int:
         return sum(self.sheds.values())
 
+    def classes(self) -> List[str]:
+        return sorted(set(self._cls_lat) | set(self._cls_sheds))
+
+    def by_class(self) -> Dict[str, List[float]]:
+        """Raw per-class latency observations (obs adapters read this)."""
+        return {c: list(v) for c, v in self._cls_lat.items()}
+
     def summary(self) -> LatencySummary:
         lat = np.asarray(self._lat, np.float64)
-        shed = self.n_shed
-        rate = shed / (lat.size + shed) if (lat.size + shed) else 0.0
-        if lat.size == 0:
-            return LatencySummary(
-                0, self.wall_s, 0.0, 0.0, 0.0, 0.0, 0.0, shed, rate
+        return _summarize(lat, self.wall_s, self.n_shed)
+
+    def summary_by_class(self) -> Dict[str, LatencySummary]:
+        """One summary per SLO class. wall_s/throughput are 0: the wall
+        clock is shared across classes and not attributable to one."""
+        return {
+            c: _summarize(
+                np.asarray(self._cls_lat.get(c, []), np.float64),
+                0.0,
+                self._cls_sheds.get(c, 0),
             )
-        p50, p90, p99 = np.percentile(
-            lat, [50, 90, 99], method="lower"
-        )
-        return LatencySummary(
-            count=int(lat.size),
-            wall_s=self.wall_s,
-            throughput_qps=lat.size / max(self.wall_s, 1e-12),
-            p50_ms=float(p50) * 1e3,
-            p90_ms=float(p90) * 1e3,
-            p99_ms=float(p99) * 1e3,
-            max_ms=float(lat.max()) * 1e3,
-            shed=shed,
-            shed_rate=rate,
-        )
+            for c in self.classes()
+        }

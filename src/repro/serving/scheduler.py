@@ -46,11 +46,17 @@ from __future__ import annotations
 import time
 from typing import Callable, List, Optional, Sequence
 
+from ..obs import trace as obs_trace
 from .engine import QueryEngine
 from .metrics import LatencyRecorder, LatencySummary
 from .requests import Query, QueryResult
 
 __all__ = ["MicrobatchScheduler"]
+
+
+def _slo_class(q: Query) -> str:
+    """Latency class label for per-SLO breakdowns (the query kind)."""
+    return q.kind.name.lower()
 
 
 class MicrobatchScheduler:
@@ -98,7 +104,7 @@ class MicrobatchScheduler:
         caller's signal to back off or retry elsewhere."""
         if self.max_queue is not None and len(self._pending) >= self.max_queue:
             self.n_shed_depth += 1
-            self.recorder.record_shed("depth")
+            self.recorder.record_shed("depth", cls=_slo_class(query))
             return False
         self._pending.append((query, self._clock(), bool(urgent)))
         if urgent:
@@ -115,7 +121,7 @@ class MicrobatchScheduler:
                 and len(self._pending) >= self.max_queue
             ):
                 self.n_shed_depth += 1
-                self.recorder.record_shed("depth")
+                self.recorder.record_shed("depth", cls=_slo_class(q))
                 continue
             self._pending.append((q, t, False))
             admitted += 1
@@ -141,7 +147,9 @@ class MicrobatchScheduler:
     def _drain_window(self) -> List[QueryResult]:
         chunk = self._pending[: self.max_batch]
         t0 = self._clock()
-        results = self.engine.execute_batch([q for q, _, _ in chunk])
+        with obs_trace.span("scheduler_flush", cat="serving",
+                            n=len(chunk)):
+            results = self.engine.execute_batch([q for q, _, _ in chunk])
         t1 = self._clock()
         # dequeue only after success: an engine error must leave the
         # chunk queued (visible, retryable), not silently dropped
@@ -151,7 +159,8 @@ class MicrobatchScheduler:
         self.n_batches += 1
         for (q, t_sub, _), r in zip(chunk, results):
             r.latency_s = t1 - t_sub
-            self.recorder.record(r.latency_s)
+            self.recorder.record(r.latency_s, cls=_slo_class(q))
+        obs_trace.counter("queue_depth", len(self._pending))
         return results
 
     def flush(self) -> List[QueryResult]:
@@ -172,7 +181,7 @@ class MicrobatchScheduler:
         for item in self._pending:
             if now - item[1] >= self.shed_wait:
                 self.n_shed_deadline += 1
-                self.recorder.record_shed("deadline")
+                self.recorder.record_shed("deadline", cls=_slo_class(item[0]))
                 if item[2]:
                     self._n_urgent -= 1
             else:

@@ -26,6 +26,7 @@ from typing import List, Optional, Sequence
 
 from ..core.csr import CSRGraph
 from ..core.runtime import ShardedRuntime
+from ..obs import trace as obs_trace
 from ..streaming.coherence import StreamingCacheCoherence
 from ..streaming.incremental import BatchResult, StreamingLCCEngine
 from ..streaming.updates import EdgeBatch
@@ -150,7 +151,9 @@ class LiveQueryService:
         assert self.scheduler.pending == 0, (
             "drain queries before applying updates (single-writer)"
         )
-        return self.stream.apply_batch(batch)
+        with obs_trace.span("apply_updates", cat="write",
+                            n=batch.u.size):
+            return self.stream.apply_batch(batch)
 
     # ---------------- read path ----------------
     def submit(self, query: Query, *, urgent: bool = False) -> bool:
@@ -167,6 +170,37 @@ class LiveQueryService:
     def query(self, query: Query) -> QueryResult:
         """Synchronous single query (no microbatching)."""
         return self.engine.execute_batch([query])[0]
+
+    # ---------------- observability ----------------
+    def metrics_registry(self, *, tracer=None):
+        """One queryable snapshot of every ledger this service owns:
+        per-rank provider/cache stats, device tier, serve matrix +
+        placement gauges, serving latency (overall and per SLO class),
+        and — under SPMD execution — the measured ``CollectiveLedger``
+        with the measured-vs-modeled RMA reconciliation. Pass the
+        active ``Tracer`` to fold per-phase wall time in too."""
+        from ..obs.metrics import (
+            MetricRegistry,
+            fold_trace,
+            record_collective_ledger,
+            record_coherence_report,
+            record_latency,
+            record_reconciliation,
+            record_runtime,
+        )
+
+        reg = MetricRegistry()
+        record_runtime(reg, self.runtime)
+        record_latency(reg, self.scheduler.recorder)
+        spmd = getattr(self.engine, "spmd", None)
+        if spmd is not None:
+            record_collective_ledger(reg, spmd.ledger)
+            record_reconciliation(reg, self.runtime, spmd.ledger)
+        if self.coherence is not None:
+            record_coherence_report(reg, self.coherence.report)
+        if tracer is not None:
+            fold_trace(reg, tracer)
+        return reg
 
     # ---------------- invariants ----------------
     @property

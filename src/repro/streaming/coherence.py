@@ -37,6 +37,7 @@ from ..core.cache import (
     refresh_static_degree_cache,
 )
 from ..core.runtime import ShardedRuntime
+from ..obs import trace as obs_trace
 
 __all__ = ["CoherenceReport", "StreamingCacheCoherence"]
 
@@ -137,10 +138,15 @@ class StreamingCacheCoherence:
         """Called by the engine after applying a batch (``ins``/``dele``
         are the effective ``[K, 2]`` edge arrays; ``store`` holds the
         post-batch graph). Returns the cumulative report."""
-        rep = self.report
         pairs = np.concatenate([ins, dele], axis=0)
         if pairs.shape[0] == 0:
-            return rep
+            return self.report
+        with obs_trace.span("delta_replay", cat="coherence",
+                            n=pairs.shape[0]):
+            return self._on_batch_impl(pairs, store)
+
+    def _on_batch_impl(self, pairs: np.ndarray, store) -> CoherenceReport:
+        rep = self.report
         changed = np.unique(pairs.ravel())
 
         # 1. coherence: cached copies of mutated rows are stale — the

@@ -40,6 +40,7 @@ from ..kernels.delta_intersect import (
     delta_intersect_masks,
 )
 from ..kernels.resident_intersect import resident_intersect_counts
+from ..obs import trace as obs_trace
 from .store import DynamicCSR
 from .updates import EdgeBatch, normalize_batch
 
@@ -167,6 +168,11 @@ class StreamingLCCEngine:
         return total // 3
 
     def apply_batch(self, batch: EdgeBatch) -> BatchResult:
+        with obs_trace.span("stream_batch", cat="streaming",
+                            n=batch.u.size):
+            return self._apply_batch_impl(batch)
+
+    def _apply_batch_impl(self, batch: EdgeBatch) -> BatchResult:
         ins, dele, n_noop = normalize_batch(batch, self.store)
         delta6 = np.zeros(self.n, np.int64)
         delta_pairs = 0
@@ -304,7 +310,7 @@ class StreamingLCCEngine:
                 if shard.shape[0] == 0:
                     continue
                 total += self._delta6_for_shard(
-                    shard, d_adj, delta6, sign=sign
+                    shard, d_adj, delta6, sign=sign, rank=rank
                 )
                 self.shard_pairs[rank] += shard.shape[0]
             return total
@@ -380,6 +386,7 @@ class StreamingLCCEngine:
                 d_adj,
                 delta6,
                 sign=sign,
+                rank=rank,
                 rowdata=rowdata[rank],
                 oo_counts=counts[rank],
             )
@@ -422,6 +429,7 @@ class StreamingLCCEngine:
         delta6: np.ndarray,
         *,
         sign: int,
+        rank: int = 0,
         rowdata=None,
         oo_counts: Optional[np.ndarray] = None,
     ) -> int:
@@ -429,6 +437,23 @@ class StreamingLCCEngine:
         ``oo_counts`` injects old∩old counts computed elsewhere (the
         SPMD executor) — they are still cross-checked against the host
         membership masks below."""
+        with obs_trace.span("intersect_kernel", rank=rank, cat="streaming",
+                            pairs=pairs.shape[0]):
+            return self._delta6_for_shard_impl(
+                pairs, d_adj, delta6, sign=sign,
+                rowdata=rowdata, oo_counts=oo_counts,
+            )
+
+    def _delta6_for_shard_impl(
+        self,
+        pairs: np.ndarray,
+        d_adj: Dict[int, np.ndarray],
+        delta6: np.ndarray,
+        *,
+        sign: int,
+        rowdata=None,
+        oo_counts: Optional[np.ndarray] = None,
+    ) -> int:
         store = self.store
         sent = store.n
         k = pairs.shape[0]
