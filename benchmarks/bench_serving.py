@@ -121,6 +121,51 @@ def _trace_overhead(csr, store, queries, *, window, reps):
     }
 
 
+def _cache_trace_overhead(csr, store, queries, *, window, reps):
+    """Cost of the cachescope recorder hooks (same construction as
+    ``_trace_overhead``): when recording is off, every ``ClampiCache.get``
+    pays one module-global load plus two ``is not None`` checks. Gate =
+    microbenched disabled-hook cost x hooks one serve would fire (the
+    event count of one recorded serve), over the disabled serve wall."""
+    from repro.obs import cachescope as obs_cachescope
+
+    walls_off = sorted(
+        _serve(csr, store, queries, window=window, cached=True)["wall_s"]
+        for _ in range(reps)
+    )
+    rec = obs_cachescope.enable_recording()
+    try:
+        t0 = time.perf_counter()
+        _serve(csr, store, queries, window=window, cached=True)
+        wall_rec = time.perf_counter() - t0
+    finally:
+        obs_cachescope.disable_recording()
+    events_per_run = rec.n_events()
+
+    n = 200_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        r = obs_cachescope._recorder
+        if r is not None:
+            pass
+        if r is not None:
+            pass
+    disabled_hook_ns = (time.perf_counter() - t0) / n * 1e9
+
+    wall_off = walls_off[reps // 2]
+    disabled_frac = (disabled_hook_ns * 1e-9 * events_per_run
+                     / max(wall_off, 1e-9))
+    return {
+        "wall_recorded_s": round(wall_rec, 4),
+        "cache_trace_enabled_overhead_frac": round(
+            wall_rec / max(wall_off, 1e-9) - 1.0, 4),
+        "disabled_cachehook_ns": round(disabled_hook_ns, 1),
+        "n_cache_events": events_per_run,
+        "cache_trace_disabled_overhead_frac": round(disabled_frac, 6),
+        "cache_trace_overhead_ok": bool(disabled_frac < 0.03),
+    }
+
+
 def run(quick: bool = True):
     scale = 9 if quick else 11
     edge_factor = 8
@@ -166,6 +211,9 @@ def run(quick: bool = True):
     # into the suite metrics snapshot (run.py writes it next to --out)
     out.update(_trace_overhead(csr, store, qs_zipf, window=windows[-1],
                                reps=3 if quick else 5))
+    out.update(_cache_trace_overhead(csr, store, qs_zipf,
+                                     window=windows[-1],
+                                     reps=3 if quick else 5))
     from repro.obs import trace as obs_trace
     from repro.obs.metrics import (
         MetricRegistry,

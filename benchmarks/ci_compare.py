@@ -36,6 +36,7 @@ METRICS = {
     "device_tier.streaming_materialization_reduction": "higher",
     "device_tier.device_hit_rate_zipf": "higher",
     "cache_size_fig7.max_comm_reduction_adj_only": "higher",
+    "cache_size_fig7.mattson_speedup": "higher",
 }
 
 # metric path -> must be truthy in the current run
@@ -43,6 +44,9 @@ BOOLEANS = [
     "spmd_scaling.model_agreement_all",
     "schedule_rebuild.bit_exact",
     "serving_queries.trace_overhead_ok",
+    "serving_queries.cache_trace_overhead_ok",
+    "scores_fig8.replay_reconciled",
+    "cache_size_fig7.mattson_matches_direct",
 ]
 
 

@@ -112,10 +112,32 @@ def checklist(results):
         checks.append((f"C_adj alone cuts comm time by "
                        f"{f7['max_comm_reduction_adj_only']:.0%} (paper: ~52%)",
                        f7["max_comm_reduction_adj_only"] > 0.3))
+    if "mattson_speedup" in f7:
+        checks.append((
+            f"cachescope: Fig. 7 curves from ONE recorded trace "
+            f"(Mattson), {f7['mattson_speedup']:.1f}x faster than the "
+            f"per-size sweep, bit-exact at "
+            f"{len(f7.get('mattson_spot_checks', []))} spot capacities",
+            f7["mattson_matches_direct"] and f7["mattson_speedup"] > 1.0,
+        ))
     f8 = results.get("scores_fig8", {}).get("rows", [])
     if f8:
         checks.append(("degree scores beat LRU on every graph (Fig. 8)",
                        all(r["degree_score_improvement"] > 0 for r in f8)))
+        checks.append((
+            "cachescope: Fig. 8 policy rows replayed offline from one "
+            "recorded run; deployed replay reconciles bit-exactly",
+            results["scores_fig8"].get("replay_reconciled", False),
+        ))
+        checks.append((
+            "cachescope: clairvoyant Belady dominates every replayed "
+            "policy (Fig. 8)",
+            all(r["belady"]["hit_rate"]
+                >= max(r["degree"]["hit_rate"],
+                       r["lru_positional"]["hit_rate"],
+                       r["ewma"]["hit_rate"])
+                for r in f8),
+        ))
     f9 = results.get("strong_scaling_fig9_10", {}).get("modeled", [])
     for g in f9:
         last = g["rows"][-1]
@@ -196,6 +218,14 @@ def checklist(results):
             f"({sv['disabled_span_ns']:.0f} ns/span x "
             f"{sv['n_spans_enabled']:.0f} spans; target < 3%)",
             sv["trace_overhead_ok"],
+        ))
+    if "cache_trace_overhead_ok" in sv:
+        checks.append((
+            f"observability: disabled cachescope hook overhead "
+            f"{sv['cache_trace_disabled_overhead_frac']:.2%} of serve "
+            f"wall ({sv['disabled_cachehook_ns']:.0f} ns/get x "
+            f"{sv['n_cache_events']} events; target < 3%)",
+            sv["cache_trace_overhead_ok"],
         ))
     sp = results.get("spmd_scaling", {})
     if "model_agreement_all" in sp:

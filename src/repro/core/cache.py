@@ -30,6 +30,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..obs import cachescope as obs_cachescope
 from ..obs import trace as obs_trace
 
 __all__ = [
@@ -72,6 +73,10 @@ class CacheStats:
     invalidations: int = 0  # coherence: entries dropped because stale
     bytes_hit: int = 0
     bytes_missed: int = 0
+    # bytes of evicted entries later re-referenced: the live byte-
+    # denominated "premature eviction" counter (cachescope audits the
+    # access-window version offline)
+    bytes_evicted_live: int = 0
     comm_time: float = 0.0
 
     @property
@@ -116,6 +121,10 @@ class ClampiCache:
     'user' (explicit ``flush()``).
     """
 
+    # offline-replay caches set this True on the instance so an active
+    # cachescope recorder never re-records a replay of its own trace
+    _scope_exempt = False
+
     def __init__(
         self,
         capacity_bytes: int,
@@ -139,6 +148,7 @@ class ClampiCache:
         self.stats = CacheStats()
         self._seen: set[int] = set()
         self._conflicts = 0
+        self._evicted_sizes: Dict[int, int] = {}  # victim key -> size
 
     # ---------------- memory buffer management ----------------
     def _alloc(self, size: int) -> Optional[int]:
@@ -202,6 +212,11 @@ class ClampiCache:
         cache the entry (CLaMPI caches a missing entry only if resources
         allow after eviction attempts).
         """
+        rec = obs_cachescope._recorder  # one load + None check when off
+        if rec is not None:
+            # register the stream BEFORE any stat/clock mutation so the
+            # baseline snapshot excludes this very access
+            rec.touch(self)
         self.clock += 1
         st = self.stats
         st.gets += 1
@@ -213,13 +228,20 @@ class ClampiCache:
             st.hits += 1
             st.bytes_hit += size
             st.comm_time += self.net.hit_cost
+            if rec is not None:
+                rec.on_get(self, key, size, score, True)
             return True
         st.misses += 1
         if key not in self._seen:
             st.compulsory_misses += 1
             self._seen.add(key)
+        prev = self._evicted_sizes.pop(key, None)
+        if prev is not None:
+            st.bytes_evicted_live += prev
         st.bytes_missed += size
         st.comm_time += self.net.remote(size)
+        if rec is not None:
+            rec.on_get(self, key, size, score, False)
         self._insert(key, size, score)
         if self.adaptive:
             self._maybe_resize()
@@ -261,6 +283,10 @@ class ClampiCache:
         del self.entries[v.key]
         self._dealloc(v.addr, v.size)
         self.stats.evictions += 1
+        self._evicted_sizes[v.key] = v.size
+        rec = obs_cachescope._recorder
+        if rec is not None:
+            rec.on_evict(self, v.key, v.size, v.score)
         if obs_trace.fine_enabled():  # per-entry; fine mode only
             obs_trace.instant("cache_evict", cat="cache",
                               key=v.key, bytes=v.size)
@@ -276,15 +302,21 @@ class ClampiCache:
             and st.evictions > 4 * self.table_slots
         ):
             self.table_slots *= 2
-            self.flush()
+            self._flush_internal()
 
     def invalidate(self, key: int) -> bool:
         """Coherence hook: drop ``key`` because its backing data changed
         (streaming updates mutate adjacency rows in place). Unlike an
         eviction this is a *correctness* removal — the next get is a miss
         that refetches fresh data. Returns True if an entry was dropped."""
+        rec = obs_cachescope._recorder
+        if rec is not None:
+            rec.on_invalidate(self, key)
         e = self.entries.pop(key, None)
         if e is None:
+            # data changed for an already-evicted key: its next miss is
+            # a correctness refetch, not a premature-eviction signal
+            self._evicted_sizes.pop(key, None)
             return False
         self._dealloc(e.addr, e.size)
         self.stats.invalidations += 1
@@ -301,14 +333,27 @@ class ClampiCache:
         admission/eviction decisions."""
         return key in self.entries
 
-    def flush(self) -> None:
+    def _flush_internal(self) -> None:
+        """Flush without recording a trace event — used by paths the
+        cache triggers itself (adaptive resize, transparent epoch close),
+        which an offline replay regenerates deterministically."""
         self.entries.clear()
         self.free = [(0, self.capacity)]
         self.stats.flushes += 1
+        self._evicted_sizes.clear()
+
+    def flush(self) -> None:
+        rec = obs_cachescope._recorder
+        if rec is not None:
+            rec.on_flush(self)
+        self._flush_internal()
 
     def close_epoch(self) -> None:
+        rec = obs_cachescope._recorder
+        if rec is not None:
+            rec.on_close_epoch(self)
         if self.mode == "transparent":
-            self.flush()
+            self._flush_internal()
 
     @property
     def used_bytes(self) -> int:

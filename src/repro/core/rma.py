@@ -670,6 +670,9 @@ def simulate_rma_lcc(
             if offsets_cache_bytes > 0
             else None
         )
+        if c_off is not None:
+            c_off.rank = k  # cachescope stream labeling
+            c_off.scope_label = "offsets"
         # hash-table sizing heuristic of §III-B1: n * 0.5**alpha with alpha=2
         default_adj_slots = max(1, int(csr.n * 0.25))
         c_adj = (
@@ -682,6 +685,9 @@ def simulate_rma_lcc(
             if adj_cache_bytes > 0
             else None
         )
+        if c_adj is not None:
+            c_adj.rank = k
+            c_adj.scope_label = "adj"
         t = 0.0
         for v in remote:
             v = int(v)

@@ -152,6 +152,10 @@ class ShardedRuntime:
                 for _ in range(self.p)
             ]
         )
+        if self.caches is not None:
+            for k, c in enumerate(self.caches):
+                c.rank = k  # cachescope stream labeling
+                c.scope_label = "runtime"
         # payloads mirror each rank's cache residency: row copy at fetch
         self._payloads: List[Dict[int, np.ndarray]] = [
             {} for _ in range(self.p)
@@ -219,6 +223,7 @@ class ShardedRuntime:
         self.device = ResidencyManager(
             self.store, slots=slots, max_width=max_width
         )
+        self.device.scope_label = "runtime"
         self._device_slots = int(slots)
         self._device_width = max_width
         return self.device

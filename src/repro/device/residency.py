@@ -38,6 +38,7 @@ from typing import Iterable, Optional, Tuple
 import numpy as np
 
 from ..kernels.bucketing import pow2_ceil
+from ..obs import cachescope as obs_cachescope
 from ..obs import trace as obs_trace
 
 __all__ = ["ResidencyStats", "ResidencyManager"]
@@ -111,6 +112,11 @@ class ResidencyManager:
         order = np.lexsort((np.arange(self.n), score))
         order = order[score[order] > 0]
         chosen = np.sort(order[max(0, order.size - self.slots):])
+        rec = obs_cachescope._recorder
+        if rec is not None:
+            # before any mutation: a stream registered here snapshots the
+            # PRE-rebuild membership, then the "r" event installs `chosen`
+            rec.on_dev_reset(self, chosen)
         self._slot_table[:] = -1
         self.slot_ids[:] = -1
         self.widths[:] = 0
@@ -157,6 +163,9 @@ class ResidencyManager:
         hit = slots >= 0
         epochs = np.zeros(vs.size, np.int64)
         epochs[hit] = self.slot_epochs[slots[hit]]
+        rec = obs_cachescope._recorder
+        if rec is not None:
+            rec.on_dev_lookup(self, vs)
         st = self.stats
         st.lookups += int(vs.size)
         st.hits += int(np.count_nonzero(hit))
@@ -182,6 +191,9 @@ class ResidencyManager:
         """The trimmed resident row of ``v`` (None on miss), from the
         host mirror — the ``fetch_rows`` fast path."""
         s = int(self._slot_table[int(v)])
+        rec = obs_cachescope._recorder
+        if rec is not None:
+            rec.on_dev_lookup(self, [int(v)])
         st = self.stats
         st.lookups += 1
         if s < 0:
@@ -215,6 +227,9 @@ class ResidencyManager:
         out = np.full((vs.size, width), sent, np.int32)
         slots = self._slot_table[vs]
         resident = slots >= 0
+        rec = obs_cachescope._recorder
+        if rec is not None:
+            rec.on_dev_lookup(self, vs)
         st = self.stats
         st.lookups += int(vs.size)
         st.hits += int(np.count_nonzero(resident))
@@ -238,6 +253,9 @@ class ResidencyManager:
     # ---------------- coherence ----------------
     def _evict(self, s: int) -> None:
         v = int(self.slot_ids[s])
+        rec = obs_cachescope._recorder
+        if rec is not None:
+            rec.on_dev_evict(self, v)
         self._slot_table[v] = -1
         self.slot_ids[s] = -1
         self.widths[s] = 0
@@ -280,6 +298,9 @@ class ResidencyManager:
             if d == 0 or d > self.max_width:
                 self._evict(s)
             else:
+                rec = obs_cachescope._recorder
+                if rec is not None:
+                    rec.on_dev_patch(self, v)
                 self._write(s, v, self.store.row(v))
                 self.stats.patches += 1
             touched.append(s)
@@ -300,6 +321,9 @@ class ResidencyManager:
                         break  # weakest resident >= best candidate left
                     self._evict(s)
                     touched.append(s)
+                rec = obs_cachescope._recorder
+                if rec is not None:
+                    rec.on_dev_admit(self, v)
                 self._write(s, v, self.store.row(v))
                 self.stats.admits += 1
                 touched.append(s)

@@ -37,10 +37,19 @@ def main(argv=None):
     ap.add_argument("--metrics", default=None, metavar="PATH",
                     help="write the labeled metrics snapshot (per-rank "
                          "cache stats + modeled comm + per-phase time)")
+    ap.add_argument("--cache-trace", default=None, metavar="PATH",
+                    help="record the CLaMPI-sim access streams and write "
+                         "the cachescope analysis sidecar (Mattson "
+                         "hit-rate curve, eviction audit, policy replay)")
     args = ap.parse_args(argv)
     from ..obs import trace as obs_trace
 
     tracer = obs_trace.enable_tracing() if args.trace else None
+    recorder = None
+    if args.cache_trace:
+        from ..obs import cachescope as obs_cachescope
+
+        recorder = obs_cachescope.enable_recording()
 
     from ..core.async_engine import lcc_pipelined
     from ..core.cache import build_static_degree_cache
@@ -93,17 +102,30 @@ def main(argv=None):
     gets = sum(s.gets for s in st.adj_stats)
     print(f"CLaMPI-sim: adj hit rate {hits / max(gets, 1):.1%}, "
           f"modeled comm {st.makespan * 1e3:.2f} ms")
+    cache_report = None
+    if recorder is not None:
+        from ..obs import cachescope as obs_cachescope
+
+        obs_cachescope.disable_recording()
+        cache_report = obs_cachescope.analyze(recorder)
+        obs_cachescope.save_report(cache_report, args.cache_trace)
+        print(obs_cachescope.summarize(cache_report))
+        print(f"cache trace: {recorder.n_events()} events -> "
+              f"{args.cache_trace}")
     if args.metrics:
         from ..obs.metrics import (
             MetricRegistry,
             fold_trace,
             imbalance,
             record_cache_stats,
+            record_cachescope,
         )
 
         reg = MetricRegistry()
         for k, s in enumerate(st.adj_stats):
             record_cache_stats(reg, s, rank=k)
+        if cache_report is not None:
+            record_cachescope(reg, cache_report)
         reg.counter("rma_bytes_modeled",
                     float(prob.comm_bytes_per_round().sum()),
                     tier="wire", phase="fetch_rows")

@@ -96,6 +96,12 @@ def main(argv=None):
     ap.add_argument("--metrics", default=None, metavar="PATH",
                     help="write the labeled metrics snapshot (all ledgers "
                          "+ per-phase time; see docs/observability.md)")
+    ap.add_argument("--cache-trace", default=None, metavar="PATH",
+                    help="record every cache access on both tiers and "
+                         "write the cachescope analysis sidecar (reuse "
+                         "distances, Mattson hit-rate curve, eviction "
+                         "audit, offline policy replay incl. Belady; "
+                         "validated by repro.obs.validate --cachescope)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if not 0.0 <= args.write_frac <= 0.9:
@@ -114,6 +120,11 @@ def main(argv=None):
         from ..obs import trace as obs_trace
 
         tracer = obs_trace.enable_tracing(fine=args.trace_fine)
+    recorder = None
+    if args.cache_trace:
+        from ..obs import cachescope as obs_cachescope
+
+        recorder = obs_cachescope.enable_recording()
     if args.smoke:
         args.scale = min(args.scale, 8)
         args.queries = min(args.queries, 256)
@@ -278,8 +289,22 @@ def main(argv=None):
         svc.verify()
         print(f"verified: {n_verified} point queries bit-exact vs recount, "
               "0 stale cached rows")
+    cache_report = None
+    if recorder is not None:
+        from ..obs import cachescope as obs_cachescope
+
+        obs_cachescope.disable_recording()
+        cache_report = obs_cachescope.analyze(recorder)
+        obs_cachescope.save_report(cache_report, args.cache_trace)
+        print(obs_cachescope.summarize(cache_report))
+        print(f"cache trace: {recorder.n_events()} events -> "
+              f"{args.cache_trace}")
     if args.metrics:
         reg = svc.metrics_registry(tracer=tracer)
+        if cache_report is not None:
+            from ..obs.metrics import record_cachescope
+
+            record_cachescope(reg, cache_report)
         snap = reg.to_dict()
         reg.save(args.metrics)
         print(f"metrics: {len(snap['counters'])} counters, "

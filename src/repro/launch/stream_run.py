@@ -91,6 +91,12 @@ def main(argv=None):
     ap.add_argument("--metrics", default=None, metavar="PATH",
                     help="write the labeled metrics snapshot (all ledgers "
                          "+ per-phase time; see docs/observability.md)")
+    ap.add_argument("--cache-trace", default=None, metavar="PATH",
+                    help="record every cache access on both tiers and "
+                         "write the cachescope analysis sidecar (reuse "
+                         "distances, Mattson hit-rate curve, eviction "
+                         "audit, offline policy replay incl. Belady; "
+                         "validated by repro.obs.validate --cachescope)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.trace_fine and not args.trace:
@@ -100,6 +106,11 @@ def main(argv=None):
         from ..obs import trace as obs_trace
 
         tracer = obs_trace.enable_tracing(fine=args.trace_fine)
+    recorder = None
+    if args.cache_trace:
+        from ..obs import cachescope as obs_cachescope
+
+        recorder = obs_cachescope.enable_recording()
     ranks = args.ranks if args.ranks is not None else args.p
     if args.spmd:
         # before anything initializes jax (the device count is locked at
@@ -261,11 +272,22 @@ def main(argv=None):
         print("final state verified bit-exact vs from-scratch recount"
               + (" (incl. maintained schedule)"
                  if args.maintain_schedule else ""))
+    cache_report = None
+    if recorder is not None:
+        from ..obs import cachescope as obs_cachescope
+
+        obs_cachescope.disable_recording()
+        cache_report = obs_cachescope.analyze(recorder)
+        obs_cachescope.save_report(cache_report, args.cache_trace)
+        print(obs_cachescope.summarize(cache_report))
+        print(f"cache trace: {recorder.n_events()} events -> "
+              f"{args.cache_trace}")
     if args.metrics:
         from ..obs.metrics import (
             MetricRegistry,
             fold_trace,
             imbalance,
+            record_cachescope,
             record_coherence_report,
             record_collective_ledger,
             record_runtime,
@@ -274,6 +296,8 @@ def main(argv=None):
         reg = MetricRegistry()
         record_runtime(reg, runtime)
         record_coherence_report(reg, rep)
+        if cache_report is not None:
+            record_cachescope(reg, cache_report)
         # streaming's load dimension is the sharded delta worklist
         for k in range(ranks):
             reg.counter("shard_pairs", int(eng.shard_pairs[k]), rank=k,

@@ -7,19 +7,33 @@
   serializable snapshot.
 - ``repro.obs.validate`` — CLI + library checks for the exported
   artifacts (Chrome-trace schema, span-tree nesting, cross-ledger
-  accounting invariants).
+  accounting invariants, cachescope replay reconciliation).
+- ``repro.obs.cachescope`` — per-rank, per-tier cache access-trace
+  recorder + analysis engine (reuse distances, Mattson hit-rate curves,
+  eviction audit, offline policy replay with Belady bound).
 
 See docs/observability.md for the taxonomy and usage.
 """
-from . import trace
+from . import cachescope, trace
+from .cachescope import (
+    CacheTraceRecorder,
+    disable_recording,
+    enable_recording,
+    get_recorder,
+)
 from .metrics import MetricRegistry
 from .trace import Tracer, disable_tracing, enable_tracing, get_tracer
 
 __all__ = [
     "trace",
+    "cachescope",
     "MetricRegistry",
     "Tracer",
     "enable_tracing",
     "disable_tracing",
     "get_tracer",
+    "CacheTraceRecorder",
+    "enable_recording",
+    "disable_recording",
+    "get_recorder",
 ]

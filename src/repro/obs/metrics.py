@@ -51,6 +51,7 @@ __all__ = [
     "record_coherence_report",
     "record_runtime",
     "record_reconciliation",
+    "record_cachescope",
     "fold_trace",
     "imbalance",
     "load_snapshot",
@@ -324,6 +325,36 @@ def record_reconciliation(reg: MetricRegistry, runtime,
     reg.gauge("rma_bytes_delta", measured_bytes - modeled_bytes,
               tier="wire")
     reg.gauge("rma_rows_delta", measured_rows - modeled_rows, tier="wire")
+
+
+def record_cachescope(reg: MetricRegistry, report: dict) -> None:
+    """A cachescope analysis report (``repro.obs.cachescope/v1``) →
+    per-stream gauges and per-policy replay counters. Gauges answer the
+    cache-science questions directly from a metrics snapshot: did the
+    replay reconcile, how premature are evictions, what would each
+    policy have scored on this exact trace, and how far is the deployed
+    policy from the clairvoyant bound."""
+    for s in report["streams"]:
+        tier = s["tier"]
+        rank = int(s["rank"])
+        reg.gauge("cachescope_reconciled",
+                  1.0 if s["reconciled"] else 0.0, rank=rank, tier=tier)
+        a = s["analysis"]
+        audit = a.get("eviction_audit")
+        if audit and audit["n_evictions"]:
+            reg.gauge("premature_eviction_frac", audit["reref_frac"],
+                      rank=rank, tier=tier)
+            reg.counter("bytes_evicted_reref", audit["bytes_evicted_live"],
+                        rank=rank, tier=tier)
+        for pol, rep in s.get("replay", {}).items():
+            if "hit_rate" in rep:
+                reg.gauge(f"replay_hit_rate:{pol}", rep["hit_rate"],
+                          rank=rank, tier=tier)
+    summ = report["summary"]
+    reg.gauge("cachescope_reconciled_all",
+              1.0 if summ["all_reconciled"] else 0.0, tier="host_cache")
+    reg.gauge("cachescope_belady_dominates",
+              1.0 if summ["belady_dominates"] else 0.0, tier="host_cache")
 
 
 def fold_trace(reg: MetricRegistry, tracer) -> None:

@@ -22,6 +22,17 @@ Metric invariants (the cross-ledger accounting identities):
     ``rma_agreement`` gauge is 1.0)
   - the placement gauges (``load_imbalance``, ``serve_matrix_skew``)
     are populated (> 0) whenever any rows were read
+
+Cachescope checks (``--cachescope``, schema ``repro.obs.cachescope/v1``):
+  - per stream: required keys, tier in {host_cache, device}, event
+    arrays aligned
+  - the replay-reconciliation invariant *recomputed from the raw
+    events*: replaying the recorded trace under the deployed policy
+    must reproduce the live stats deltas bit-exactly (host: gets/hits/
+    misses/evictions/...; device: lookups/hits/misses/admits/evicts/
+    patches) — not just trusting the stored ``reconciled`` flag
+  - the stored Belady replay dominates every real policy's hits
+  - Mattson spot checks (when present) all match direct simulation
 """
 from __future__ import annotations
 
@@ -30,7 +41,8 @@ import json
 import sys
 from typing import Dict, List, Optional, Tuple
 
-__all__ = ["validate_trace", "validate_metrics", "main"]
+__all__ = ["validate_trace", "validate_metrics", "validate_cachescope",
+           "main"]
 
 _REQUIRED_EVENT_KEYS = ("name", "ph", "pid", "tid")
 
@@ -196,6 +208,99 @@ def validate_metrics(snap: dict) -> List[str]:
 
 
 # --------------------------------------------------------------------------
+# Cachescope sidecar
+# --------------------------------------------------------------------------
+
+_HOST_STREAM_KEYS = ("tier", "rank", "label", "config", "events", "live",
+                     "replay", "reconciled", "analysis")
+_HOST_EVENT_KEYS = ("kinds", "keys", "sizes", "scores", "hits")
+
+
+def validate_cachescope(doc: dict) -> List[str]:
+    """Return a list of violations (empty == valid). Recomputes the
+    deployed-policy replay from the raw events instead of trusting the
+    stored ``reconciled`` flag."""
+    from .cachescope import (
+        DEVICE_COMPARE,
+        HOST_COMPARE,
+        SCHEMA,
+        replay_device,
+        replay_host,
+    )
+
+    bad: List[str] = []
+    if doc.get("schema") != SCHEMA:
+        return [f"unknown cachescope schema {doc.get('schema')!r}"]
+    streams = doc.get("streams")
+    if not isinstance(streams, list):
+        return ["top-level 'streams' list missing"]
+    for i, s in enumerate(streams):
+        label = f"stream {i} ({s.get('label')!r} r{s.get('rank')})"
+        missing = [k for k in _HOST_STREAM_KEYS if k not in s]
+        if missing:
+            bad.append(f"{label}: missing keys {missing}")
+            continue
+        tier = s["tier"]
+        if tier not in ("host_cache", "device"):
+            bad.append(f"{label}: unknown tier {tier!r}")
+            continue
+        if tier == "host_cache":
+            ev = s["events"]
+            miss_ev = [k for k in _HOST_EVENT_KEYS if k not in ev]
+            if miss_ev:
+                bad.append(f"{label}: events missing {miss_ev}")
+                continue
+            n = len(ev["kinds"])
+            if not (len(ev["keys"]) == len(ev["sizes"])
+                    == len(ev["scores"]) == len(ev["hits"]) == n):
+                bad.append(f"{label}: event arrays misaligned")
+                continue
+            recomputed = replay_host(s, policy="deployed")
+            compare = HOST_COMPARE
+        else:
+            recomputed = replay_device(s)
+            compare = DEVICE_COMPARE
+        live = s["live"]
+        diffs = [
+            f"{k}: live {int(live.get(k, 0))} != replay "
+            f"{int(recomputed.get(k, 0))}"
+            for k in compare
+            if int(live.get(k, 0)) != int(recomputed.get(k, 0))
+        ]
+        if diffs:
+            bad.append(f"{label}: replay does not reconcile "
+                       f"({'; '.join(diffs)})")
+        if not s["reconciled"]:
+            bad.append(f"{label}: stored reconciled flag is false")
+        if tier == "host_cache":
+            replay = s["replay"]
+            bel = replay.get("belady")
+            if bel is None:
+                bad.append(f"{label}: belady replay missing")
+            else:
+                for pol, rep in replay.items():
+                    if pol != "belady" and rep.get("hits", 0) > bel["hits"]:
+                        bad.append(
+                            f"{label}: policy {pol!r} beats belady "
+                            f"({rep['hits']} > {bel['hits']})"
+                        )
+            spot = s["analysis"].get("spot_checks") or []
+            for sc in spot:
+                if not sc["match"]:
+                    bad.append(
+                        f"{label}: mattson/direct mismatch at capacity "
+                        f"{sc['capacity_bytes']} ({sc['mattson_hits']} != "
+                        f"{sc['direct_hits']})"
+                    )
+    summ = doc.get("summary", {})
+    if summ.get("all_reconciled") is not True and not any(
+        "reconcile" in m for m in bad
+    ):
+        bad.append("summary.all_reconciled is not true")
+    return bad
+
+
+# --------------------------------------------------------------------------
 # CLI
 # --------------------------------------------------------------------------
 
@@ -205,9 +310,13 @@ def main(argv=None) -> int:
     )
     ap.add_argument("--trace", default=None, help="Chrome trace JSON path")
     ap.add_argument("--metrics", default=None, help="metrics snapshot path")
+    ap.add_argument("--cachescope", default=None,
+                    help="cachescope sidecar (.cachescope.json) path")
     args = ap.parse_args(argv)
-    if not args.trace and not args.metrics:
-        ap.error("nothing to validate: pass --trace and/or --metrics")
+    if not args.trace and not args.metrics and not args.cachescope:
+        ap.error(
+            "nothing to validate: pass --trace, --metrics, or --cachescope"
+        )
 
     violations: List[str] = []
     if args.trace:
@@ -227,6 +336,14 @@ def main(argv=None) -> int:
               f"{len(snap.get('gauges', []))} gauges, "
               f"{len(v)} violation(s)")
         violations += [f"metrics: {m}" for m in v]
+    if args.cachescope:
+        with open(args.cachescope) as f:
+            doc = json.load(f)
+        v = validate_cachescope(doc)
+        n_streams = len(doc.get("streams", []) or [])
+        print(f"[validate] cachescope {args.cachescope}: {n_streams} "
+              f"stream(s), {len(v)} violation(s)")
+        violations += [f"cachescope: {m}" for m in v]
 
     for m in violations:
         print(f"[validate]   FAIL {m}")

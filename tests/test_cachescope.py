@@ -1,0 +1,369 @@
+"""Cache-science observability: access-trace recording, Mattson
+reuse-distance analytics, eviction audit, and offline policy replay.
+
+The load-bearing invariant everywhere: replaying the recorded stream
+under the *deployed* policy must reproduce the live ``CacheStats``
+deltas bit-exactly, on both tiers, warm or cold, with or without
+invalidations — otherwise every derived curve is fiction."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from conftest import powerlaw_graph, random_graph
+
+from repro.core.cache import (
+    CacheStats,
+    ClampiCache,
+    merge_cache_stats,
+)
+from repro.core.runtime import ShardedRuntime
+from repro.obs import cachescope
+from repro.obs.validate import validate_cachescope
+from repro.streaming import DynamicCSR
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_recorder():
+    yield
+    cachescope.disable_recording()
+
+
+def _zipf_ids(n, k, seed=0, a=1.3):
+    r = np.random.default_rng(seed)
+    ids = r.zipf(a, size=k) - 1
+    return np.minimum(ids, n - 1)
+
+
+def _runtime(p=4, n=120, seed=0, **kw):
+    csr = powerlaw_graph(n, 6, seed=seed)
+    store = DynamicCSR.from_csr(csr)
+    return ShardedRuntime(store, p, cache_bytes=1 << 12, **kw), store
+
+
+def _drive(rt, store, seed=1, rounds=3, invalidate=True):
+    r = np.random.default_rng(seed)
+    for it in range(rounds):
+        for rank in range(rt.p):
+            ids = _zipf_ids(store.n, 150, seed=seed + 7 * it + rank)
+            rt.fetch_rows(rank, ids)
+        if invalidate:
+            rt.invalidate(r.integers(0, store.n, size=10))
+
+
+def _assert_host_reconciles(stream):
+    live = stream.live_delta()
+    rep = cachescope.replay_host(stream, policy="deployed")
+    for k in cachescope.HOST_COMPARE:
+        assert live[k] == rep[k], (
+            f"{stream.label} r{stream.rank}: {k} live={live[k]} "
+            f"replay={rep[k]}")
+
+
+# ---------------------------------------------------------------------------
+# recording: disabled path, exemption, event capture
+# ---------------------------------------------------------------------------
+def test_disabled_recording_records_nothing():
+    assert cachescope.get_recorder() is None
+    assert not cachescope.recording_enabled()
+    c = ClampiCache(1 << 10, 16)
+    c.get(1, 100)
+    c.get(1, 100)
+    c.invalidate(1)
+    # nothing blows up and nothing is retained anywhere
+    assert cachescope.get_recorder() is None
+
+
+def test_replay_caches_are_exempt_from_recording():
+    rec = cachescope.enable_recording()
+    c = ClampiCache(1 << 10, 16)
+    for k in (1, 2, 3, 1):
+        c.get(k, 64)
+    streams = rec.host_streams()
+    assert len(streams) == 1
+    # replaying while recording is still on must not register new streams
+    cachescope.replay_host(streams[0], policy="deployed")
+    assert len(rec.host_streams()) == 1
+
+
+# ---------------------------------------------------------------------------
+# the reconciliation property, host tier
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("p", [1, 4])
+@pytest.mark.parametrize("graph", ["powerlaw", "rmat_like"])
+def test_host_replay_reconciles_bit_exactly(p, graph):
+    if graph == "powerlaw":
+        csr = powerlaw_graph(150, 6, seed=2)
+    else:
+        csr = random_graph(150, 8, seed=3)
+    store = DynamicCSR.from_csr(csr)
+    rt = ShardedRuntime(store, p, cache_bytes=1 << 12)
+    rec = cachescope.enable_recording()
+    _drive(rt, store, seed=p, invalidate=True)
+    if p == 1:
+        # single rank: every read is local, so the runtime never touches
+        # its cache — drive the rank's ClampiCache directly instead
+        r = np.random.default_rng(11)
+        for k in _zipf_ids(store.n, 400, seed=12):
+            rt.caches[0].get(int(k), int(8 * (1 + k % 9)),
+                             score=float(k))
+        for k in r.integers(0, store.n, size=15):
+            rt.caches[0].invalidate(int(k))
+    cachescope.disable_recording()
+    streams = rec.host_streams()
+    assert streams, "no host streams recorded"
+    for s in streams:
+        _assert_host_reconciles(s)
+
+
+@pytest.mark.parametrize("policy", ["lru", "lru_positional", "degree",
+                                    "ewma"])
+def test_alternate_policies_replay_cleanly(policy):
+    rt, store = _runtime(p=2)
+    rec = cachescope.enable_recording()
+    _drive(rt, store)
+    cachescope.disable_recording()
+    for s in rec.host_streams():
+        rep = cachescope.replay_host(s, policy=policy)
+        assert rep["gets"] == s.live_delta()["gets"]  # same access stream
+        assert rep["hits"] + rep["misses"] == rep["gets"]
+
+
+def test_warm_start_recording_reconciles():
+    """Recording may begin mid-life: the preload snapshot restores the
+    cache's entries/clock/free-list so the replay starts warm."""
+    rt, store = _runtime(p=2)
+    _drive(rt, store, seed=5, rounds=2)          # un-recorded prefix
+    rec = cachescope.enable_recording()
+    _drive(rt, store, seed=9, rounds=2)          # recorded suffix
+    cachescope.disable_recording()
+    streams = rec.host_streams()
+    assert streams
+    for s in streams:
+        assert s.preload["entries"], "warm stream should carry a preload"
+        _assert_host_reconciles(s)
+
+
+def test_epoch_flush_events_replay():
+    """Transparent-mode caches flush on close_epoch; the events must be
+    recorded so replays cross epoch boundaries in lockstep."""
+    rec = cachescope.enable_recording()
+    c = ClampiCache(1 << 9, 16, mode="transparent")
+    for k in (1, 2, 3, 1, 2):
+        c.get(k, 64)
+    c.close_epoch()
+    for k in (1, 2, 4):
+        c.get(k, 64)
+    c.flush()
+    c.get(1, 64)
+    cachescope.disable_recording()
+    (s,) = rec.host_streams()
+    assert "c" in s.kinds and "f" in s.kinds
+    _assert_host_reconciles(s)
+
+
+# ---------------------------------------------------------------------------
+# the reconciliation property, device tier
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("p", [1, 4])
+def test_device_replay_reconciles_bit_exactly(p):
+    rt, store = _runtime(p=p)
+    rec = cachescope.enable_recording()
+    rt.enable_device_tier(8)
+    _drive(rt, store, invalidate=True)
+    cachescope.disable_recording()
+    dstreams = rec.device_streams()
+    assert dstreams, "no device streams recorded"
+    for s in dstreams:
+        live = s.live_delta()
+        rep = cachescope.replay_device(s)
+        for k in cachescope.DEVICE_COMPARE:
+            assert live[k] == rep[k], f"{k}: {live[k]} != {rep[k]}"
+
+
+# ---------------------------------------------------------------------------
+# Mattson stack distances vs direct simulation
+# ---------------------------------------------------------------------------
+def _invalidation_free_stream(seed=0, n_keys=40, n_gets=600):
+    rec = cachescope.enable_recording()
+    c = ClampiCache(1 << 11, 64)
+    r = np.random.default_rng(seed)
+    keys = _zipf_ids(n_keys, n_gets, seed=seed)
+    sizes = 16 + 8 * (np.arange(n_keys) % 7)
+    for k in keys:
+        c.get(int(k), int(sizes[k]))
+    cachescope.disable_recording()
+    (s,) = rec.host_streams()
+    return s
+
+
+def test_mattson_matches_direct_lru_simulation():
+    s = _invalidation_free_stream()
+    d = cachescope.reuse_distances(s)
+    assert not d["had_invalidations"]
+    lo = d["max_entry_bytes"]
+    caps = [lo, 2 * lo, 4 * lo, 16 * lo, 1 << 20]
+    assert len(caps) >= 3
+    curve = cachescope.hit_curve(d["dist_bytes"], caps)
+    for c, m_hits in zip(caps, curve):
+        direct_hits, direct_misses = cachescope.simulate_lru_bytes(s, c)
+        assert int(m_hits) == direct_hits, f"capacity {c}"
+        assert direct_hits + direct_misses == d["n_gets"]
+
+
+def test_mattson_curve_monotone_with_compulsory_floor():
+    s = _invalidation_free_stream(seed=4)
+    d = cachescope.reuse_distances(s)
+    caps = [1 << i for i in range(4, 22)]
+    curve = cachescope.hit_curve(d["dist_bytes"], caps)
+    assert all(a <= b for a, b in zip(curve, curve[1:]))
+    compulsory = int(np.count_nonzero(d["dist_bytes"] < 0))
+    assert int(curve[-1]) == d["n_gets"] - compulsory
+
+
+# ---------------------------------------------------------------------------
+# Belady dominance
+# ---------------------------------------------------------------------------
+def test_belady_dominates_every_replayed_policy():
+    rt, store = _runtime(p=2)
+    rec = cachescope.enable_recording()
+    _drive(rt, store, rounds=4)
+    cachescope.disable_recording()
+    for s in rec.host_streams():
+        bel = cachescope.replay_belady(s)
+        for policy in ("deployed", "lru", "lru_positional", "degree",
+                       "ewma"):
+            rep = cachescope.replay_host(s, policy=policy)
+            assert bel["hits"] >= rep["hits"], (
+                f"belady {bel['hits']} < {policy} {rep['hits']}")
+
+
+# ---------------------------------------------------------------------------
+# eviction-quality audit + bytes_evicted_live
+# ---------------------------------------------------------------------------
+def test_eviction_audit_sanity():
+    rec = cachescope.enable_recording()
+    c = ClampiCache(1 << 9, 8)  # tiny: forces evictions
+    keys = _zipf_ids(60, 800, seed=6)
+    for k in keys:
+        c.get(int(k), 48, score=float(k % 5))
+    cachescope.disable_recording()
+    (s,) = rec.host_streams()
+    audit = cachescope.eviction_audit(s, ks=(16, 128))
+    assert audit["n_evictions"] == c.stats.evictions > 0
+    assert 0.0 <= audit["reref_frac"] <= 1.0
+    for k, frac in audit["premature_within_k"].items():
+        assert 0.0 <= frac <= 1.0
+    assert audit["bytes_evicted_live"] <= audit["bytes_evicted"]
+    assert audit["bytes_evicted_live"] == c.stats.bytes_evicted_live
+
+
+def test_bytes_evicted_live_counts_only_rereferenced_victims():
+    c = ClampiCache(100, 8)
+    assert c.get(1, 60) is False and c.get(2, 60) is False  # evicts 1
+    assert c.stats.evictions == 1
+    assert c.stats.bytes_evicted_live == 0  # not re-referenced yet
+    c.get(1, 60)  # premature eviction materializes
+    assert c.stats.bytes_evicted_live == 60
+    c.get(2, 60)  # 2 was evicted by 1's return; re-referenced too
+    assert c.stats.bytes_evicted_live == 120
+
+
+def test_bytes_evicted_live_ignores_invalidated_victims():
+    c = ClampiCache(100, 8)
+    c.get(1, 60)
+    c.get(2, 60)        # evicts 1
+    c.invalidate(1)     # 1 changed upstream: refetch is correctness,
+    c.get(1, 60)        # not an eviction mistake
+    assert c.stats.bytes_evicted_live == 0
+
+
+def test_bytes_evicted_live_reset_by_flush():
+    c = ClampiCache(100, 8)
+    c.get(1, 60)
+    c.get(2, 60)
+    c.flush()
+    c.get(1, 60)
+    assert c.stats.bytes_evicted_live == 0
+
+
+def test_merge_cache_stats_includes_bytes_evicted_live():
+    empty = merge_cache_stats([])
+    assert empty.bytes_evicted_live == 0
+    one = CacheStats(gets=3, bytes_evicted_live=7)
+    assert merge_cache_stats([one]).bytes_evicted_live == 7
+    mixed = [CacheStats(), CacheStats(bytes_evicted_live=5),
+             CacheStats(bytes_evicted_live=0)]
+    merged = merge_cache_stats(mixed)
+    assert merged.bytes_evicted_live == 5
+    # every field must aggregate, not just the ones we remembered
+    for f in dataclasses.fields(CacheStats):
+        assert getattr(merged, f.name) == sum(
+            getattr(s, f.name) for s in mixed)
+
+
+# ---------------------------------------------------------------------------
+# analyze() report, sidecar, validator
+# ---------------------------------------------------------------------------
+def _recorded_report(tmp_path=None):
+    rt, store = _runtime(p=2)
+    rec = cachescope.enable_recording()
+    rt.enable_device_tier(8)
+    _drive(rt, store)
+    cachescope.disable_recording()
+    return cachescope.analyze(rec)
+
+
+def test_analyze_summary_and_roundtrip(tmp_path):
+    report = _recorded_report()
+    assert report["summary"]["all_reconciled"]
+    assert report["summary"]["belady_dominates"]
+    assert (report["summary"]["n_host_streams"]
+            + report["summary"]["n_device_streams"]
+            == report["summary"]["n_streams"])
+    path = tmp_path / "run.cachescope.json"
+    cachescope.save_report(report, str(path))
+    doc = cachescope.load_report(str(path))
+    assert validate_cachescope(doc) == []
+    assert cachescope.summarize(doc)  # human summary renders
+
+
+def test_metrics_adapter_exports_cachescope_gauges():
+    from repro.obs.metrics import MetricRegistry, record_cachescope
+    from repro.obs.validate import validate_metrics
+
+    report = _recorded_report()
+    reg = MetricRegistry()
+    record_cachescope(reg, report)
+    snap = reg.to_dict()
+    names = {g["name"] for g in snap["gauges"]}
+    assert "cachescope_reconciled_all" in names
+    assert "cachescope_reconciled" in names
+    assert any(n.startswith("replay_hit_rate:") for n in names)
+    assert validate_metrics(snap) == []
+
+
+@pytest.mark.parametrize("corrupt", [
+    "schema", "missing_stream_key", "misaligned", "tampered_live",
+    "false_reconciled",
+])
+def test_validator_rejects_corrupt_sidecars(corrupt):
+    doc = json.loads(json.dumps(_recorded_report()))  # deep plain copy
+    host = next(s for s in doc["streams"] if s["tier"] == "host_cache")
+    if corrupt == "schema":
+        doc["schema"] = "repro.obs.cachescope/v0"
+    elif corrupt == "missing_stream_key":
+        del host["events"]
+    elif corrupt == "misaligned":
+        host["events"]["keys"] = host["events"]["keys"][:-1]
+    elif corrupt == "tampered_live":
+        host["live"]["hits"] = host["live"]["hits"] + 1
+    elif corrupt == "false_reconciled":
+        host["reconciled"] = False
+    assert validate_cachescope(doc) != [], corrupt
+
+
+def test_validator_accepts_doc_and_live_streams_alike():
+    report = _recorded_report()
+    assert validate_cachescope(json.loads(json.dumps(report))) == []
