@@ -42,6 +42,8 @@ METRICS = {
 # metric path -> must be truthy in the current run
 BOOLEANS = [
     "spmd_scaling.model_agreement_all",
+    "spmd_scaling.upload_savings_positive",
+    "spmd_scaling.wire_padding_reduced",
     "schedule_rebuild.bit_exact",
     "serving_queries.trace_overhead_ok",
     "serving_queries.cache_trace_overhead_ok",

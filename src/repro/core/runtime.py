@@ -178,16 +178,25 @@ class ShardedRuntime:
         self.schedule_rebuilds = 0
         self.schedule_deltas = 0
         self.schedule_residency_refreshes = 0
-        # optional device-resident hot-row tier, below the host caches
-        # (content identical across ranks by construction — one manager
-        # models the per-device replicated buffer; per-rank hit counts
-        # live in ProviderStats).
+        # optional device-resident hot-row tier, below the host caches.
+        # scope="replicated": one manager models the per-device
+        # replicated buffer (content identical across ranks by
+        # construction; per-rank hit counts live in ProviderStats).
+        # scope="per_rank": p managers, each holding its OWN rank's
+        # remote-heavy rows (a rank's owned range is excluded — those
+        # reads are local and never touch the tier).
         self.device = None
+        self._devices: Optional[list] = None
+        self.device_scope = "replicated"
         self._device_slots = int(device_slots)
         self._device_width = device_width
         # one-shot set of ids whose device rows a producer has already
         # patched this batch (consumed by the next invalidate)
         self._device_fresh_once = None
+        # coherence listeners beyond the built-in tiers (e.g. the SPMD
+        # executor's resident shard buffer): called with the changed-id
+        # list on every invalidate, and with None on a store swap.
+        self._invalidation_listeners: list = []
         if self._device_slots and self.store is not None:
             self.enable_device_tier(self._device_slots, self._device_width)
 
@@ -209,24 +218,97 @@ class ShardedRuntime:
                 if cache.entries:
                     cache.flush()
                 self._payloads[k].clear()
-        if self._device_slots and (swapped or self.device is None):
-            self.enable_device_tier(self._device_slots, self._device_width)
+        if swapped:
+            for fn in self._invalidation_listeners:
+                fn(None)  # everything captured from the old store is dead
+        if self._device_slots and (swapped or not self.has_device_tier):
+            self.enable_device_tier(
+                self._device_slots, self._device_width,
+                scope=self.device_scope,
+            )
 
-    def enable_device_tier(self, slots: int, max_width: Optional[int] = None):
+    def enable_device_tier(
+        self,
+        slots: int,
+        max_width: Optional[int] = None,
+        *,
+        scope: str = "replicated",
+    ):
         """Build (or rebuild, against the current store) the device-
         resident hot-row tier: ``slots`` degree-scored rows padded to
         ``max_width``, consulted by ``fetch_rows`` before the host cache
-        and kept coherent by ``invalidate``."""
+        and kept coherent by ``invalidate``.
+
+        ``scope="replicated"`` models one buffer identical on every
+        device (the pre-PR-8 behavior). ``scope="per_rank"`` gives each
+        rank a *distinct* hot set that excludes the rank's own owned
+        range — local reads never touch the tier, so replicating an
+        owner's rows on its own device wastes slots; each rank instead
+        holds its hottest remote rows."""
         from ..device import ResidencyManager
 
         assert self.store is not None, "bind a store first"
-        self.device = ResidencyManager(
-            self.store, slots=slots, max_width=max_width
-        )
-        self.device.scope_label = "runtime"
+        assert scope in ("replicated", "per_rank"), scope
+        self.device_scope = scope
+        if scope == "replicated":
+            self.device = ResidencyManager(
+                self.store, slots=slots, max_width=max_width
+            )
+            self.device.scope_label = "runtime"
+            self.device.rank = -1
+            self._devices = None
+        else:
+            self.device = None
+            self._devices = []
+            for k in range(self.p):
+                mgr = ResidencyManager(
+                    self.store,
+                    slots=slots,
+                    max_width=max_width,
+                    exclude_range=(int(self.part.lo(k)),
+                                   int(self.part.hi(k))),
+                )
+                mgr.scope_label = "runtime"
+                mgr.rank = k
+                self._devices.append(mgr)
         self._device_slots = int(slots)
         self._device_width = max_width
+        return self.device if self.device is not None else self._devices
+
+    @property
+    def has_device_tier(self) -> bool:
+        return self.device is not None or self._devices is not None
+
+    def device_for(self, rank: int):
+        """The device-tier manager serving ``rank``'s reads (None when
+        the tier is off): the shared replicated manager, or rank's own
+        hot set under ``scope="per_rank"``."""
+        if self._devices is not None:
+            return self._devices[int(rank)]
         return self.device
+
+    def device_views(self) -> list:
+        """All distinct device-tier managers (0 or 1 when replicated,
+        p when per-rank) — for coherence fanout, audits, and metrics."""
+        if self._devices is not None:
+            return list(self._devices)
+        return [self.device] if self.device is not None else []
+
+    def merged_device_stats(self):
+        """Summed ResidencyStats across the tier's views (None when the
+        tier is off)."""
+        views = self.device_views()
+        if not views:
+            return None
+        return merge_counter_dataclasses(
+            type(views[0].stats), [v.stats for v in views]
+        )
+
+    def add_invalidation_listener(self, fn) -> None:
+        """Register a coherence listener: ``fn(changed_ids)`` on every
+        invalidate, ``fn(None)`` (= drop everything) on a store swap."""
+        if fn not in self._invalidation_listeners:
+            self._invalidation_listeners.append(fn)
 
     def build_static_cache(self, capacity_rows: int) -> StaticDegreeCache:
         """Install a shared top-C degree-scored resident set."""
@@ -277,7 +359,7 @@ class ShardedRuntime:
         st = self.stats[rank]
         out: Dict[int, np.ndarray] = {}
         store = self.store
-        dev = self.device
+        dev = self.device_for(rank)
         if self.caches is None:
             for v in vertices:
                 v = int(v)
@@ -385,12 +467,17 @@ class ShardedRuntime:
         # are skipped once — they were patched against the same final
         # state, so a second merge+upload would only burn time and
         # double-count the patch/upload ledger.
-        if self.device is not None:
-            fresh = self._device_fresh_once or ()
-            dev_ids = [v for v in changed if v not in fresh]
-            if dev_ids:
-                self.device.notify_batch(dev_ids)
+        fresh = self._device_fresh_once or ()
+        dev_ids = [v for v in changed if v not in fresh]
+        if dev_ids:
+            for dev in self.device_views():
+                dev.notify_batch(dev_ids)
         self._device_fresh_once = None
+        # external coherence listeners (e.g. the SPMD resident buffer)
+        # observe every mutation, including producer-fresh ids: they key
+        # content by id, not by the device tier's patch schedule.
+        for fn in self._invalidation_listeners:
+            fn(changed)
         if self.caches is None:
             return 0
         dropped = 0
@@ -454,8 +541,8 @@ class ShardedRuntime:
             c, s = self.audit_rank(k)
             cached += c
             stale += s
-        if self.device is not None:
-            c, s = self.device.audit()
+        for dev in self.device_views():
+            c, s = dev.audit()
             cached += c
             stale += s
         return cached, stale

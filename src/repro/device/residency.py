@@ -73,12 +73,22 @@ class ResidencyManager:
         *,
         slots: int,
         max_width: Optional[int] = None,
+        exclude_range: Optional[Tuple[int, int]] = None,
     ):
+        """``exclude_range=(lo, hi)`` makes vertices in ``[lo, hi)``
+        ineligible — the per-rank hot-set mode: a rank's own owned
+        block is served locally and never reads through the tier, so
+        its slots should hold remote-heavy rows instead."""
         assert slots >= 1
         self.store = store
         self.n = int(store.n)
         self.sentinel = self.n
         self.slots = int(slots)
+        self.exclude_range = (
+            (int(exclude_range[0]), int(exclude_range[1]))
+            if exclude_range is not None
+            else None
+        )
         if max_width is None:
             max_width = pow2_ceil(max(int(store.max_degree), 1))
         self.max_width = int(max_width)
@@ -97,7 +107,11 @@ class ResidencyManager:
     # ---------------- selection ----------------
     def _eligible_scores(self) -> np.ndarray:
         deg = np.asarray(self.store.degrees, np.int64)
-        return np.where((deg > 0) & (deg <= self.max_width), deg, -1)
+        score = np.where((deg > 0) & (deg <= self.max_width), deg, -1)
+        if self.exclude_range is not None:
+            lo, hi = self.exclude_range
+            score[lo:hi] = -1  # owned rows are local reads — never cached
+        return score
 
     def rebuild(self) -> None:
         """Select the hot set from scratch: top-``slots`` eligible
@@ -308,6 +322,9 @@ class ResidencyManager:
         #    weakest resident only on a STRICT score win (no tie churn)
         cand = changed[slots < 0]
         cand = cand[(deg[cand] > 0) & (deg[cand] <= self.max_width)]
+        if self.exclude_range is not None:
+            lo, hi = self.exclude_range
+            cand = cand[(cand < lo) | (cand >= hi)]
         if cand.size:
             cand = cand[np.argsort(-deg[cand], kind="stable")]
             for v in cand.tolist():

@@ -12,11 +12,17 @@ each keeping a private copy.
 """
 from __future__ import annotations
 
-from typing import Iterator, Sequence, Tuple
+from typing import Iterator, List, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["pow2_ceil", "width_classes", "pack_rows", "iter_width_buckets"]
+__all__ = [
+    "pow2_ceil",
+    "width_classes",
+    "pack_rows",
+    "iter_width_buckets",
+    "split_width_buckets",
+]
 
 
 def pow2_ceil(x: int, floor: int = 1) -> int:
@@ -63,3 +69,33 @@ def iter_width_buckets(
     key = wa_cls << 32 | wb_cls
     for k in np.unique(key):
         yield np.flatnonzero(key == k), int(k >> 32), int(k & 0xFFFFFFFF)
+
+
+def split_width_buckets(
+    widths: Sequence[int], max_buckets: int = 4
+) -> List[Tuple[np.ndarray, int]]:
+    """Partition items into at most ``max_buckets`` width groups.
+
+    Each group's padded width is the pow-2 ceiling of its widest member,
+    so per-item padding waste stays < 2x *within* a bucket while the
+    number of padded shapes (and therefore compiled variants /
+    collective launches) stays bounded. When more than ``max_buckets``
+    pow-2 classes occur, the class with the fewest members is merged
+    into the next-larger class (repeatedly) — a deterministic rule that
+    sacrifices the least total padding. Returns ``[(indices, width)]``
+    sorted by width ascending; empty input yields ``[]``; a single
+    width class yields the degenerate one-bucket split.
+    """
+    assert max_buckets >= 1
+    widths = np.asarray(widths, np.int64)
+    if widths.size == 0:
+        return []
+    cls = width_classes(widths)
+    uniq = [int(c) for c in np.unique(cls)]
+    while len(uniq) > max_buckets:
+        counts = [int(np.count_nonzero(cls == c)) for c in uniq]
+        # never merge the top class upward — it has no larger neighbor
+        i = int(np.argmin(counts[:-1]))
+        cls[cls == uniq[i]] = uniq[i + 1]
+        uniq.pop(i)
+    return [(np.flatnonzero(cls == c), c) for c in uniq]

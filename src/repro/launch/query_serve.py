@@ -59,6 +59,17 @@ def main(argv=None):
                          "measured traffic is reconciled against the "
                          "modeled serve matrix; needs >= ranks devices "
                          "(host devices are forced automatically)")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="with --spmd: double-buffer microbatches — the "
+                         "host pack + collective launch of window k+1 "
+                         "overlaps window k's in-flight device intersect "
+                         "(bit-identical results; end_batch is the only "
+                         "device sync)")
+    ap.add_argument("--device-scope", choices=("replicated", "per_rank"),
+                    default="replicated",
+                    help="with --device-tier: one hot set replicated on "
+                         "every device, or a distinct per-rank hot set "
+                         "of each rank's own remote-heavy rows")
     ap.add_argument("--max-wait-ms", type=float, default=None,
                     help="deadline-aware batching: flush a partial window "
                          "once its oldest query waited this long")
@@ -113,6 +124,10 @@ def main(argv=None):
     if args.spmd and args.ranks <= 0:
         ap.error("--spmd executes the cross-rank views on devices; "
                  "pass --ranks p")
+    if args.pipeline and not args.spmd:
+        ap.error("--pipeline double-buffers SPMD microbatches; pass --spmd")
+    if args.device_scope != "replicated" and not args.device_tier:
+        ap.error("--device-scope shapes the device tier; pass --device-tier")
     if args.trace_fine and not args.trace:
         ap.error("--trace-fine needs --trace")
     tracer = None
@@ -165,6 +180,8 @@ def main(argv=None):
         device_width=args.device_width,
         uncached=args.uncached,
         execution="spmd" if args.spmd else "loop",
+        pipeline=args.pipeline,
+        device_scope=args.device_scope,
     )
 
     # 2x safety factor: event kinds are drawn i.i.d., so an unlucky
@@ -267,6 +284,13 @@ def main(argv=None):
               f"), {led.bytes_on_wire} B on the padded wire, "
               f"{led.n_pairs} pairs intersected on-device in "
               f"{led.device_wall_s:.2f}s")
+        print(f"  async plane: {led.bytes_uploaded} B uploaded in "
+              f"{led.n_patches} resident-buffer patches, "
+              f"{led.upload_bytes_saved} B re-upload saved; wire padding "
+              f"saved {led.wire_padding_saved} B vs single-width "
+              f"({led.bytes_on_wire_single} B)"
+              + (f"; overlap wait {led.overlap_wait_s:.2f}s"
+                 if args.pipeline else ""))
         assert agree, "measured collective traffic != modeled serve matrix"
     print(f"pair dedup: {svc.engine.n_pairs_raw} raw -> "
           f"{svc.engine.n_pairs_total} intersected")
@@ -276,10 +300,14 @@ def main(argv=None):
               f"{sch.n_shed_depth} depth + {sch.n_shed_deadline} deadline "
               f"(shed rate {lat.shed_rate:.1%})")
     if args.device_tier:
-        dev = svc.runtime.device
-        ds = dev.stats
-        print(f"device tier[{dev.resident_rows}/{dev.slots} slots x "
-              f"width {dev.max_width}]: {svc.engine.n_pairs_resident} "
+        views = svc.runtime.device_views()
+        ds = svc.runtime.merged_device_stats()
+        resident = sum(v.resident_rows for v in views)
+        slots = sum(v.slots for v in views)
+        label = (f"{len(views)} per-rank hot sets"
+                 if args.device_scope == "per_rank" else "replicated")
+        print(f"device tier[{label}, {resident}/{slots} slots x "
+              f"width {views[0].max_width}]: {svc.engine.n_pairs_resident} "
               f"resident pairs, hit rate {ds.hit_rate:.1%}, "
               f"{ds.bytes_saved} B host materialization saved "
               f"({svc.engine.host_pack_bytes} B still packed), "

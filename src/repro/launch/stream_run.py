@@ -58,6 +58,16 @@ def main(argv=None):
                          "all_to_all and the old-intersect-old counts run "
                          "on-device, cross-checked against the host "
                          "membership masks; needs >= ranks devices")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="with --spmd: double-buffer the two batch phases "
+                         "— the insert phase's host pack + collective "
+                         "launch overlaps the delete phase's in-flight "
+                         "device intersect (bit-identical results)")
+    ap.add_argument("--device-scope", choices=("replicated", "per_rank"),
+                    default="replicated",
+                    help="with --device-tier: one hot set replicated on "
+                         "every device, or a distinct per-rank hot set "
+                         "of each rank's own remote-heavy rows")
     ap.add_argument("--adversarial", action="store_true",
                     help="hub-targeted deletes (stresses degree-score drift)")
     ap.add_argument("--cache-rows", type=int, default=256)
@@ -101,6 +111,10 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.trace_fine and not args.trace:
         ap.error("--trace-fine needs --trace")
+    if args.pipeline and not args.spmd:
+        ap.error("--pipeline double-buffers SPMD phases; pass --spmd")
+    if args.device_scope != "replicated" and not args.device_tier:
+        ap.error("--device-scope shapes the device tier; pass --device-tier")
     tracer = None
     if args.trace:
         from ..obs import trace as obs_trace
@@ -145,6 +159,7 @@ def main(argv=None):
         compact_threshold=args.compact_threshold,
         coherence=coh,
         execution="spmd" if args.spmd else "loop",
+        pipeline=args.pipeline,
     )
     runtime = eng.runtime
     if args.device_tier:
@@ -154,6 +169,7 @@ def main(argv=None):
         runtime.enable_device_tier(
             args.device_slots,
             args.device_width if args.device_width is not None else 256,
+            scope=args.device_scope,
         )
     if args.maintain_schedule:
         # compile the schedule WITH the coherence layer's static
@@ -248,6 +264,13 @@ def main(argv=None):
               f"{led.n_pairs} oo pairs intersected on-device in "
               f"{led.device_wall_s:.2f}s (counts cross-checked vs host "
               f"masks every batch)")
+        print(f"  async plane: {led.bytes_uploaded} B uploaded in "
+              f"{led.n_patches} resident-buffer patches, "
+              f"{led.upload_bytes_saved} B re-upload saved; wire padding "
+              f"saved {led.wire_padding_saved} B vs single-width "
+              f"({led.bytes_on_wire_single} B)"
+              + (f"; overlap wait {led.overlap_wait_s:.2f}s"
+                 if args.pipeline else ""))
     if args.maintain_schedule:
         print(f"schedule: {runtime.schedule_deltas} incremental deltas, "
               f"{runtime.schedule_rebuilds} width-overflow rebuilds, "
@@ -255,10 +278,14 @@ def main(argv=None):
               f"refreshes (width {runtime.problem.width}, e_max "
               f"{runtime.problem.e_max}, s_max {runtime.problem.s_max})")
     if args.device_tier:
-        dev = runtime.device
-        ds = dev.stats
-        print(f"device tier[{dev.resident_rows}/{dev.slots} slots x "
-              f"width {dev.max_width}]: {eng.oo_resident_pairs} oo pairs "
+        views = runtime.device_views()
+        ds = runtime.merged_device_stats()
+        resident = sum(v.resident_rows for v in views)
+        slots = sum(v.slots for v in views)
+        label = (f"{len(views)} per-rank hot sets"
+                 if args.device_scope == "per_rank" else "replicated")
+        print(f"device tier[{label}, {resident}/{slots} slots x "
+              f"width {views[0].max_width}]: {eng.oo_resident_pairs} oo pairs "
               f"on-device, hit rate {ds.hit_rate:.1%}, "
               f"{ds.bytes_saved} B host materialization saved "
               f"({eng.oo_host_bytes} B still built), "

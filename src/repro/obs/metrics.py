@@ -235,6 +235,27 @@ def record_collective_ledger(reg: MetricRegistry, ledger) -> None:
                 tier="wire", phase="all_to_all")
     reg.counter("device_wall_s", float(ledger.device_wall_s),
                 tier="wire", phase="all_to_all")
+    # The async data plane's savings ledgers: what the width-bucketed
+    # collectives stopped padding onto the wire, and what the resident
+    # device buffer stopped re-uploading (getattr: tolerate pre-async
+    # ledger shims in tests).
+    reg.counter("bytes_on_wire_single",
+                float(getattr(ledger, "bytes_on_wire_single", 0)),
+                tier="wire", phase="all_to_all")
+    reg.counter("wire_padding_saved",
+                float(getattr(ledger, "wire_padding_saved", 0)),
+                tier="wire", phase="all_to_all")
+    reg.counter("bytes_uploaded",
+                float(getattr(ledger, "bytes_uploaded", 0)),
+                tier="wire", phase="spmd_patch")
+    reg.counter("upload_bytes_saved",
+                float(getattr(ledger, "upload_bytes_saved", 0)),
+                tier="wire", phase="spmd_patch")
+    reg.counter("spmd_patches", float(getattr(ledger, "n_patches", 0)),
+                tier="wire", phase="spmd_patch")
+    reg.counter("overlap_wait_s",
+                float(getattr(ledger, "overlap_wait_s", 0.0)),
+                tier="wire", phase="spmd_overlap_wait")
     served = np.asarray(ledger.rows_shipped).sum(axis=1)
     for k in range(served.size):
         reg.counter("rows_served_measured", float(served[k]), rank=k,
@@ -269,8 +290,10 @@ def record_runtime(reg: MetricRegistry, runtime) -> None:
     if runtime.caches is not None:
         for rank, c in enumerate(runtime.caches):
             record_cache_stats(reg, c.stats, rank=rank)
-    if getattr(runtime, "device", None) is not None:
-        record_residency_stats(reg, runtime.device.stats)
+    for dev in getattr(runtime, "device_views", lambda: [])():
+        # replicated: one view at rank -1; per_rank: one per rank
+        record_residency_stats(reg, dev.stats,
+                               rank=getattr(dev, "rank", -1))
 
     serve = np.asarray(runtime.serve_rows, np.float64)
     reg.counter("rma_rows_modeled", float(serve.sum()),

@@ -36,6 +36,8 @@ docs/observability.md for the full map):
     delta_replay      coherence replay of a delta access stream
     stream_batch      one applied streaming update batch
     spmd_pack         host-side packing of one SPMD execution unit
+    spmd_patch        resident-buffer drift patched to device (H2D)
+    spmd_overlap_wait the reconciliation barrier of a pipelined unit
 
 Fine mode (``enable_tracing(fine=True)``) additionally emits per-entry
 ``cache_admit``/``cache_evict`` instants from inside the cache — useful
@@ -71,6 +73,8 @@ PHASES = (
     "delta_replay",
     "stream_batch",
     "spmd_pack",
+    "spmd_patch",
+    "spmd_overlap_wait",
 )
 
 

@@ -42,7 +42,12 @@ from ..kernels.resident_intersect import resident_intersect_counts
 from .provider import DirectRowProvider, RuntimeRowProvider
 from .requests import Query, QueryKind, QueryResult
 
-__all__ = ["PreparedBatch", "QueryEngine", "ShardedQueryEngine"]
+__all__ = [
+    "PreparedBatch",
+    "InflightBatch",
+    "QueryEngine",
+    "ShardedQueryEngine",
+]
 
 
 @dataclasses.dataclass
@@ -379,6 +384,20 @@ class QueryEngine:
         return self._static_lcc
 
 
+@dataclasses.dataclass
+class InflightBatch:
+    """One dispatched-but-unfinalized SPMD microbatch. The control
+    plane (cache admission, stats, serve matrix, the measured-vs-
+    modeled reconciliation) completed at ``begin_batch``; only the
+    device counts are outstanding — ``end_batch`` waits and scatters
+    them into results."""
+
+    queries: Sequence[Query]
+    by_rank: Dict[int, List[int]]
+    preps: List[Optional[PreparedBatch]]
+    pending: object  # distributed.spmd_runtime.PendingUnit
+
+
 class ShardedQueryEngine:
     """p per-rank ``QueryEngine`` instances over one shared runtime.
 
@@ -403,7 +422,15 @@ class ShardedQueryEngine:
       the ``serve_rows`` delta the control plane modeled, and pair
       counts run on device. Answers, per-rank cache stats, and the
       serve matrix are bit-identical between the two modes (only the
-      host-packing ledgers differ — SPMD does not pack rows per pair)."""
+      host-packing ledgers differ — SPMD does not pack rows per pair).
+
+    ``pipeline`` (SPMD only) exposes the double-buffered shape: a
+    microbatch splits into ``begin_batch`` (prepare + dispatch, no
+    device sync) and ``end_batch`` (wait + finalize), so a caller — the
+    ``MicrobatchScheduler``'s ``flush`` — can overlap the pack +
+    collective of window k+1 with the in-flight intersect of window k.
+    Pipelined and unpipelined execution are bit-identical: the control
+    plane is sequential host-side either way."""
 
     def __init__(
         self,
@@ -415,9 +442,14 @@ class ShardedQueryEngine:
         interpret: Optional[bool] = None,
         lcc_source: Optional[Callable[[], np.ndarray]] = None,
         execution: str = "loop",
+        pipeline: bool = False,
     ):
         assert execution in ("loop", "spmd"), execution
+        assert not (pipeline and execution != "spmd"), (
+            "pipeline requires execution='spmd'"
+        )
         self.runtime = runtime
+        self.pipeline = bool(pipeline)
         self.engines = [
             QueryEngine(
                 store,
@@ -441,6 +473,7 @@ class ShardedQueryEngine:
                 use_kernel=use_kernel,
                 block_e=block_e,
                 interpret=interpret,
+                runtime=runtime,
             )
 
     def route(self, q: Query) -> int:
@@ -454,7 +487,7 @@ class ShardedQueryEngine:
         for i, q in enumerate(queries):
             by_rank.setdefault(self.route(q), []).append(i)
         if self.execution == "spmd":
-            return self._execute_batch_spmd(queries, by_rank)
+            return self.end_batch(self.begin_batch(queries, by_rank))
         out: List[Optional[QueryResult]] = [None] * len(queries)
         for rank, idxs in sorted(by_rank.items()):
             results = self.engines[rank].execute_batch(
@@ -465,17 +498,26 @@ class ShardedQueryEngine:
         return out  # type: ignore[return-value]
 
     # ---------------- SPMD execution ----------------
-    def _execute_batch_spmd(
-        self, queries: Sequence[Query], by_rank: Dict[int, List[int]]
-    ) -> List[QueryResult]:
-        """One device-parallel microbatch: per-rank prepare (control
-        plane: cache admission, stats, serve matrix — host-side and
-        identical to loop mode), then ONE rank-sharded intersect call,
-        then per-rank finalize. The measured collective rows are
-        asserted equal, owner-for-requester, to the modeled
-        ``serve_rows`` delta this same microbatch produced."""
+    def begin_batch(
+        self,
+        queries: Sequence[Query],
+        by_rank: Optional[Dict[int, List[int]]] = None,
+    ) -> InflightBatch:
+        """Dispatch one device-parallel microbatch WITHOUT waiting on
+        the device: per-rank prepare (control plane: cache admission,
+        stats, serve matrix — host-side and identical to loop mode),
+        then ONE rank-sharded intersect launch. The measured collective
+        rows are asserted equal, owner-for-requester, to the modeled
+        ``serve_rows`` delta this same microbatch produced — the full
+        ledger exists at dispatch, so reconciliation does not need the
+        counts. A pipelined caller may ``begin_batch`` the next
+        microbatch before ``end_batch``-ing this one."""
         from ..distributed.spmd_runtime import ShardWork
 
+        if by_rank is None:
+            by_rank = {}
+            for i, q in enumerate(queries):
+                by_rank.setdefault(self.route(q), []).append(i)
         rt = self.runtime
         serve_before = rt.serve_rows.copy()
         empty = np.zeros(0, np.int64)
@@ -492,16 +534,24 @@ class ShardedQueryEngine:
             )
             preps[rank] = prep
             shards.append(self._shard_work(rank, prep, record))
-        counts, unit = self.spmd.run(shards, rt.store)
-        measured, modeled = unit.rows_shipped, rt.serve_rows - serve_before
+        pending = self.spmd.dispatch(shards, rt.store)
+        measured = pending.unit.rows_shipped
+        modeled = rt.serve_rows - serve_before
         assert np.array_equal(measured, modeled), (
             "SPMD collective traffic diverged from the modeled serve "
             f"matrix:\nmeasured=\n{measured}\nmodeled=\n{modeled}"
         )
-        out: List[Optional[QueryResult]] = [None] * len(queries)
-        for rank, idxs in sorted(by_rank.items()):
+        return InflightBatch(queries, by_rank, preps, pending)
+
+    def end_batch(self, inflight: InflightBatch) -> List[QueryResult]:
+        """Reconciliation barrier: wait for the in-flight microbatch's
+        device counts, then per-rank finalize and reassemble results in
+        submission order."""
+        counts, _unit = inflight.pending.wait()
+        out: List[Optional[QueryResult]] = [None] * len(inflight.queries)
+        for rank, idxs in sorted(inflight.by_rank.items()):
             results = self.engines[rank].finalize_batch(
-                preps[rank], counts[rank]
+                inflight.preps[rank], counts[rank]
             )
             for i, r in zip(idxs, results):
                 out[i] = r

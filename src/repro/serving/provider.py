@@ -79,10 +79,11 @@ class RuntimeRowProvider:
 
     @property
     def residency(self):
-        """The runtime's device-resident hot-row tier (None when the
-        tier is off) — the engine routes resident-vertex pairs through
-        the ``resident_intersect`` kernel against it."""
-        return self.runtime.device
+        """The device-resident hot-row tier serving THIS rank's reads
+        (None when the tier is off; the rank's own hot set under
+        ``device_scope="per_rank"``) — the engine routes resident-vertex
+        pairs through the ``resident_intersect`` kernel against it."""
+        return self.runtime.device_for(self.rank)
 
     # ---------------- reads ----------------
     def fetch_rows(

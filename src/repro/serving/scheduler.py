@@ -165,10 +165,60 @@ class MicrobatchScheduler:
 
     def flush(self) -> List[QueryResult]:
         """Drain the queue in ``max_batch`` windows; returns all results
-        in submission order."""
+        in submission order. When the engine is a pipelined SPMD engine
+        (``engine.pipeline``), the host pack + collective launch of
+        window k+1 overlaps window k's in-flight device intersect —
+        ``end_batch`` is the only device sync (the trace's
+        ``spmd_overlap_wait``). The control plane stays sequential
+        host-side, so pipelined and unpipelined drains are bit-exact."""
+        if getattr(self.engine, "pipeline", False):
+            return self._flush_pipelined()
         out: List[QueryResult] = []
         while self._pending:
             out.extend(self._drain_window())
+        return out
+
+    # ---------------- pipelined drain ----------------
+    def _begin_window(self) -> tuple:
+        """Dispatch the front window without waiting on the device.
+        The ``scheduler_flush`` span covers only the host-side begin —
+        keeping spans disjoint per lane (the wait is its own span), so
+        the exported trace stays well-nested under overlap."""
+        chunk = self._pending[: self.max_batch]
+        t0 = self._clock()
+        with obs_trace.span("scheduler_flush", cat="serving",
+                            n=len(chunk), pipelined=True):
+            inflight = self.engine.begin_batch([q for q, _, _ in chunk])
+        # the control plane (cache admission, serve matrix, the
+        # measured-vs-modeled reconciliation) completed inside
+        # begin_batch — the chunk is committed; only device counts
+        # remain outstanding. A begin error leaves the chunk queued.
+        del self._pending[: self.max_batch]
+        self._n_urgent -= sum(1 for _, _, u in chunk if u)
+        return chunk, inflight, t0
+
+    def _finish_window(self, chunk, inflight, t0) -> List[QueryResult]:
+        results = self.engine.end_batch(inflight)
+        t1 = self._clock()
+        self.recorder.record_wall(t1 - t0)
+        self.n_batches += 1
+        for (q, t_sub, _), r in zip(chunk, results):
+            r.latency_s = t1 - t_sub
+            self.recorder.record(r.latency_s, cls=_slo_class(q))
+        obs_trace.counter("queue_depth", len(self._pending))
+        return results
+
+    def _flush_pipelined(self) -> List[QueryResult]:
+        """Double-buffered drain: begin window k+1 before finishing
+        window k, so at most one microbatch is in flight on device
+        while the next one packs on host."""
+        out: List[QueryResult] = []
+        prev = None
+        while self._pending or prev is not None:
+            nxt = self._begin_window() if self._pending else None
+            if prev is not None:
+                out.extend(self._finish_window(*prev))
+            prev = nxt
         return out
 
     def _shed_stale(self, now: float) -> None:

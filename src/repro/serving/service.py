@@ -63,11 +63,17 @@ class LiveQueryService:
         provider=None,
         uncached: bool = False,
         execution: str = "loop",
+        pipeline: bool = False,
+        device_scope: str = "replicated",
         stream_kw: Optional[dict] = None,
     ):
         assert execution == "loop" or cross_rank, (
             "SPMD execution runs the p cross-rank views on devices — "
             "pass cross_rank=True"
+        )
+        assert not pipeline or execution == "spmd", (
+            "pipeline double-buffers SPMD microbatches — pass "
+            "execution='spmd'"
         )
         hook = coherence or ProviderCoherenceHook()
         self.stream = StreamingLCCEngine(
@@ -98,7 +104,11 @@ class LiveQueryService:
             # fetch_rows consults it first, the engines route resident
             # pairs through the resident_intersect gather, and the
             # coherence fanout below keeps it fresh per update batch.
-            self.runtime.enable_device_tier(device_slots, device_width)
+            # scope="per_rank" gives each rank its own hot set of the
+            # remote-heavy rows IT reads (own-block rows are excluded).
+            self.runtime.enable_device_tier(
+                device_slots, device_width, scope=device_scope
+            )
         lcc_source = lambda: self.stream.lcc  # noqa: E731
         if cross_rank:
             assert provider is None, "cross_rank builds its own rank views"
@@ -109,6 +119,7 @@ class LiveQueryService:
                 interpret=interpret,
                 lcc_source=lcc_source,
                 execution=execution,
+                pipeline=pipeline,
             )
             self.providers = [e.provider for e in self.engine.engines]
             self.provider = self.providers[rank]

@@ -100,8 +100,13 @@ class StreamingLCCEngine:
         coherence=None,
         runtime: Optional[ShardedRuntime] = None,
         execution: str = "loop",
+        pipeline: bool = False,
     ):
         assert execution in ("loop", "spmd"), execution
+        assert not pipeline or execution == "spmd", (
+            "pipeline overlaps the two SPMD phase dispatches of a batch "
+            "— pass execution='spmd'"
+        )
         self.store = DynamicCSR.from_csr(
             csr, compact_threshold=compact_threshold
         )
@@ -122,16 +127,21 @@ class StreamingLCCEngine:
             "partition — attach a ShardedRuntime (or coherence layer)"
         )
         self.execution = execution
+        self.pipeline = bool(pipeline)
         self.spmd = None
         if execution == "spmd":
             from ..distributed.spmd_runtime import SpmdIntersectExecutor
 
+            # runtime= registers the executor's resident-buffer
+            # invalidation on the runtime's coherence fanout, so
+            # end-of-batch invalidates keep the device mirror fresh.
             self.spmd = SpmdIntersectExecutor(
                 runtime.part,
                 runtime.n,
                 use_kernel=use_kernel,
                 block_e=block_e,
                 interpret=interpret,
+                runtime=runtime,
             )
         self.shard_pairs = np.zeros(
             runtime.p if runtime is not None else 1, np.int64
@@ -176,26 +186,36 @@ class StreamingLCCEngine:
         ins, dele, n_noop = normalize_batch(batch, self.store)
         delta6 = np.zeros(self.n, np.int64)
         delta_pairs = 0
+        pipelined = (
+            self.pipeline and ins.shape[0] > 0 and dele.shape[0] > 0
+        )
         if dele.shape[0]:
             # time-reverse: destroyed triangles == triangles an insertion
             # of ``dele`` into the post-delete graph would create.
             self.store.delete_edges(dele)
-            if self.runtime is not None and self.runtime.device is not None:
-                # the delta intersections below read POST-delete rows;
-                # patch the touched resident rows now so the device tier
-                # serves the same view mid-batch (the end-of-batch
-                # coherence fanout re-syncs after the inserts land).
-                self.runtime.device.notify_batch(
-                    np.unique(dele.ravel()).tolist()
-                )
-            delta_pairs += self._accumulate_insertion_delta6(
-                dele, delta6, sign=-1
-            )
-        if ins.shape[0]:
-            delta_pairs += self._accumulate_insertion_delta6(
-                ins, delta6, sign=+1
-            )
+            self._sync_device_after_delete(dele)
+        if pipelined:
+            # double-buffered batch: both phases read the same store
+            # state (post-delete, pre-insert), so the insert phase's
+            # host pack + collective launch overlaps the delete phase's
+            # in-flight device intersect. The host-side scatter math of
+            # each phase runs at its finish — integer scatter-adds, so
+            # the result is bit-exact vs the sequential path.
+            fin_del = self._delta6_begin(dele, sign=-1)
+            fin_ins = self._delta6_begin(ins, sign=+1)
             self.store.insert_edges(ins)
+            delta_pairs += fin_del(delta6)
+            delta_pairs += fin_ins(delta6)
+        else:
+            if dele.shape[0]:
+                delta_pairs += self._accumulate_insertion_delta6(
+                    dele, delta6, sign=-1
+                )
+            if ins.shape[0]:
+                delta_pairs += self._accumulate_insertion_delta6(
+                    ins, delta6, sign=+1
+                )
+                self.store.insert_edges(ins)
 
         assert (delta6 % 6 == 0).all(), "triangle weights must close to 6"
         dt = delta6 // 6
@@ -213,7 +233,7 @@ class StreamingLCCEngine:
         self.delta_pairs_total += delta_pairs
         if (
             self.runtime is not None
-            and self.runtime.device is not None
+            and self.runtime.has_device_tier
             and dele.shape[0]
         ):
             # delete-only rows were already patched by the mid-batch
@@ -277,6 +297,56 @@ class StreamingLCCEngine:
             )
 
     # ---------------- internals ----------------
+    def _sync_device_after_delete(self, dele: np.ndarray) -> None:
+        """The delta intersections of this batch read POST-delete rows:
+        patch the touched resident rows in every device view now so the
+        device tier serves the same state mid-batch (the end-of-batch
+        coherence fanout re-syncs after the inserts land), and drop the
+        SPMD executor's resident-buffer copies of the same ids — a
+        stale buffer row would break the loop-vs-SPMD bit-exactness
+        contract."""
+        changed = np.unique(dele.ravel())
+        if self.runtime is not None and self.runtime.has_device_tier:
+            ids = changed.tolist()
+            for dv in self.runtime.device_views():
+                dv.notify_batch(ids)
+        if self.spmd is not None:
+            self.spmd.invalidate(changed)
+
+    @staticmethod
+    def _batch_adjacency(pairs: np.ndarray) -> Dict[int, np.ndarray]:
+        """Batch-internal adjacency N_D (sorted per vertex) — built over
+        the WHOLE batch: a shard's wedge-closure corrections must see
+        batch edges owned by other ranks too."""
+        d_adj: Dict[int, np.ndarray] = {}
+        for a, b in pairs:
+            d_adj.setdefault(int(a), []).append(int(b))
+            d_adj.setdefault(int(b), []).append(int(a))
+        for x in d_adj:
+            d_adj[x] = np.array(sorted(d_adj[x]), np.int64)
+        return d_adj
+
+    def _delta6_begin(self, pairs: np.ndarray, *, sign: int):
+        """Dispatch one phase's rank-sharded device intersect WITHOUT
+        waiting: all host row materialization happens here (against the
+        current post-delete / pre-insert store), so the returned
+        ``finish(delta6) -> n_pairs`` closure only waits on the device
+        counts and runs the host scatter math."""
+        assert self.spmd is not None, "pipelining is SPMD-only"
+        d_adj = self._batch_adjacency(pairs)
+        owners = self.runtime.part.owner(pairs[:, 0])
+        shards = [
+            pairs[owners == rank] for rank in range(self.runtime.p)
+        ]
+        pending, rowdata = self._delta6_spmd_dispatch(shards, d_adj)
+
+        def finish(delta6: np.ndarray) -> int:
+            return self._delta6_spmd_finish(
+                pending, shards, rowdata, d_adj, delta6, sign=sign
+            )
+
+        return finish
+
     def _accumulate_insertion_delta6(
         self, pairs: np.ndarray, delta6: np.ndarray, *, sign: int
     ) -> int:
@@ -284,15 +354,7 @@ class StreamingLCCEngine:
         inserting ``pairs``) into ``delta6``. Rows of ``self.store`` are
         the *old* neighborhoods (callers guarantee ``pairs`` are absent).
         Returns the number of row pairs sent through delta-intersect."""
-        # batch-internal adjacency N_D (sorted per vertex) — built over
-        # the WHOLE batch: a shard's wedge-closure corrections must see
-        # batch edges owned by other ranks too.
-        d_adj: Dict[int, np.ndarray] = {}
-        for a, b in pairs:
-            d_adj.setdefault(int(a), []).append(int(b))
-            d_adj.setdefault(int(b), []).append(int(a))
-        for x in d_adj:
-            d_adj[x] = np.array(sorted(d_adj[x]), np.int64)
+        d_adj = self._batch_adjacency(pairs)
 
         spmd = self.spmd is not None
         if self.runtime is not None and (self.runtime.p > 1 or spmd):
@@ -335,6 +397,15 @@ class StreamingLCCEngine:
         counts. The engine's kernel-vs-mask cross-check still runs, so
         SPMD counts are verified against the host membership masks on
         every batch."""
+        pending, rowdata = self._delta6_spmd_dispatch(shards, d_adj)
+        return self._delta6_spmd_finish(
+            pending, shards, rowdata, d_adj, delta6, sign=sign
+        )
+
+    def _delta6_spmd_dispatch(self, shards, d_adj: Dict[int, np.ndarray]):
+        """Pack every shard and launch the rank-sharded intersect; all
+        store reads happen here, so the in-flight unit is immune to
+        later store mutations. Returns ``(PendingUnit, rowdata)``."""
         from ..distributed.spmd_runtime import ShardWork
 
         rt = self.runtime
@@ -346,21 +417,22 @@ class StreamingLCCEngine:
             if shard.shape[0] == 0:
                 works.append(ShardWork(rank, empty, empty, {}))
                 continue
-            rd = self._shard_rows(shard)
+            rd = self._shard_rows(shard, rank)
             rowdata[rank] = rd
             rows_u, rows_v, res_u, res_v, w_old = rd
             u, v = shard[:, 0], shard[:, 1]
             held: Dict[int, np.ndarray] = {}
             fetched: List[int] = []
+            dev = rt.device_for(rank)
             resident = set(u[res_u].tolist()) | set(v[res_v].tolist())
             for x in np.unique(np.concatenate([u, v])):
                 x = int(x)
                 if x in resident:
                     # content the loop path would read: the device
                     # tier's persistent mirror row, not a store merge
-                    slot = int(rt.device.slot_of(x))
-                    w_true = int(rt.device.widths[slot])
-                    held[x] = rt.device.host_rows(
+                    slot = int(dev.slot_of(x))
+                    w_true = int(dev.widths[slot])
+                    held[x] = dev.host_rows(
                         np.array([slot])
                     )[0, :w_true].copy()
                 elif int(rt.part.owner(x)) == rank:
@@ -376,7 +448,22 @@ class StreamingLCCEngine:
                     fetched,
                 )
             )
-        counts, _unit = self.spmd.run(works, store)
+        return self.spmd.dispatch(works, store), rowdata
+
+    def _delta6_spmd_finish(
+        self,
+        pending,
+        shards,
+        rowdata,
+        d_adj: Dict[int, np.ndarray],
+        delta6: np.ndarray,
+        *,
+        sign: int,
+    ) -> int:
+        """Reconciliation barrier of one dispatched phase: wait for the
+        device counts, then per-shard host math (masks, corrections,
+        scatters)."""
+        counts, _unit = pending.wait()
         total = 0
         for rank, shard in enumerate(shards):
             if shard.shape[0] == 0:
@@ -393,17 +480,21 @@ class StreamingLCCEngine:
             self.shard_pairs[rank] += shard.shape[0]
         return total
 
-    def _shard_rows(self, pairs: np.ndarray):
-        """Materialize one shard's old-neighborhood rows (device-tier
-        mirror rows for resident endpoints, store merges for the rest)
-        with the host-materialization ledger updates. Returns
+    def _shard_rows(self, pairs: np.ndarray, rank: int = 0):
+        """Materialize one shard's old-neighborhood rows (the executing
+        rank's device-tier view for resident endpoints, store merges for
+        the rest) with the host-materialization ledger updates. Returns
         ``(rows_u, rows_v, res_u, res_v, w_old)``."""
         store = self.store
         sent = store.n
         k = pairs.shape[0]
         u, v = pairs[:, 0], pairs[:, 1]
         w_old = max(int(store.degrees[np.concatenate([u, v])].max()), 1)
-        dev = self.runtime.device if self.runtime is not None else None
+        dev = (
+            self.runtime.device_for(rank)
+            if self.runtime is not None
+            else None
+        )
         if dev is not None:
             # resident hub rows come from the tier's persistent mirror
             # (no per-batch DynamicCSR merge); only the rest are
@@ -440,7 +531,7 @@ class StreamingLCCEngine:
         with obs_trace.span("intersect_kernel", rank=rank, cat="streaming",
                             pairs=pairs.shape[0]):
             return self._delta6_for_shard_impl(
-                pairs, d_adj, delta6, sign=sign,
+                pairs, d_adj, delta6, sign=sign, rank=rank,
                 rowdata=rowdata, oo_counts=oo_counts,
             )
 
@@ -451,6 +542,7 @@ class StreamingLCCEngine:
         delta6: np.ndarray,
         *,
         sign: int,
+        rank: int = 0,
         rowdata=None,
         oo_counts: Optional[np.ndarray] = None,
     ) -> int:
@@ -460,9 +552,13 @@ class StreamingLCCEngine:
         u, v = pairs[:, 0], pairs[:, 1]
 
         if rowdata is None:
-            rowdata = self._shard_rows(pairs)
+            rowdata = self._shard_rows(pairs, rank)
         rows_u, rows_v, res_u, res_v, w_old = rowdata
-        dev = self.runtime.device if self.runtime is not None else None
+        dev = (
+            self.runtime.device_for(rank)
+            if self.runtime is not None
+            else None
+        )
         w_new = max(max(len(r) for r in d_adj.values()), 1)
         rows_du = _padded_from_dict(d_adj, u, w_new, sent)
         rows_dv = _padded_from_dict(d_adj, v, w_new, sent)

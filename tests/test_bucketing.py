@@ -1,0 +1,131 @@
+"""Edge cases of the shared pow-2 width-bucketing helpers.
+
+These are the primitives behind every padded kernel shape and every
+width-bucketed collective, so their corner behavior (zero widths, exact
+powers of two, degenerate bucket budgets) is pinned here explicitly.
+"""
+import numpy as np
+import pytest
+
+from repro.kernels.bucketing import (
+    pack_rows,
+    pow2_ceil,
+    split_width_buckets,
+    width_classes,
+)
+
+
+# --------------------------------------------------------------------------
+# pow2_ceil / width_classes
+# --------------------------------------------------------------------------
+def test_pow2_ceil_zero_and_one():
+    # width 0 (empty row) still pads to a legal 1-wide shape
+    assert pow2_ceil(0) == 1
+    assert pow2_ceil(1) == 1
+
+
+@pytest.mark.parametrize("w", [1, 2, 4, 8, 256, 1 << 20])
+def test_pow2_ceil_exact_power_is_identity(w):
+    assert pow2_ceil(w) == w  # no gratuitous doubling at the boundary
+
+
+@pytest.mark.parametrize("w, want", [(3, 4), (5, 8), (9, 16), (1025, 2048)])
+def test_pow2_ceil_rounds_up(w, want):
+    assert pow2_ceil(w) == want
+
+
+def test_pow2_ceil_floor():
+    assert pow2_ceil(3, floor=8) == 8   # floor dominates small x
+    assert pow2_ceil(9, floor=8) == 16  # x dominates past the floor
+    assert pow2_ceil(0, floor=6) == 8   # floor itself is still ceiled
+
+
+def test_width_classes_matches_scalar():
+    ws = [0, 1, 2, 3, 4, 5, 7, 8, 9, 1023, 1024]
+    got = width_classes(ws)
+    want = np.array([pow2_ceil(w) for w in ws], np.int64)
+    assert np.array_equal(got, want)
+    assert width_classes([]).size == 0
+
+
+# --------------------------------------------------------------------------
+# pack_rows
+# --------------------------------------------------------------------------
+def test_pack_rows_empty_and_all_empty_rows():
+    assert pack_rows([], 4, -1).shape == (0, 4)
+    out = pack_rows([np.zeros(0, np.int32)] * 3, 4, -1)
+    assert out.shape == (3, 4) and (out == -1).all()
+
+
+def test_pack_rows_ragged():
+    rows = [np.array([5], np.int32), np.array([1, 2, 3], np.int32)]
+    out = pack_rows(rows, 4, -1)
+    assert np.array_equal(out[0], [5, -1, -1, -1])
+    assert np.array_equal(out[1], [1, 2, 3, -1])
+
+
+# --------------------------------------------------------------------------
+# split_width_buckets
+# --------------------------------------------------------------------------
+def _cover(splits, n):
+    """Every index appears in exactly one bucket."""
+    seen = np.concatenate([idx for idx, _ in splits]) if splits else (
+        np.zeros(0, np.int64)
+    )
+    assert np.array_equal(np.sort(seen), np.arange(n))
+
+
+def test_split_empty():
+    assert split_width_buckets([], 4) == []
+
+
+def test_split_single_class_is_degenerate():
+    ws = [5, 6, 7, 8]  # all pow2-class 8
+    splits = split_width_buckets(ws, 4)
+    assert len(splits) == 1
+    idx, w = splits[0]
+    assert w == 8 and np.array_equal(idx, np.arange(4))
+
+
+def test_split_max_buckets_one_merges_everything():
+    ws = [1, 2, 4, 8, 16, 300]
+    splits = split_width_buckets(ws, 1)
+    assert len(splits) == 1
+    idx, w = splits[0]
+    assert w == 512  # pow2 ceiling of the widest member
+    _cover(splits, len(ws))
+
+
+def test_split_respects_budget_and_covers():
+    rng = np.random.default_rng(0)
+    ws = rng.integers(0, 400, size=200)
+    for cap in (1, 2, 3, 4):
+        splits = split_width_buckets(ws, cap)
+        assert 1 <= len(splits) <= cap
+        _cover(splits, len(ws))
+        # widths ascend, every member fits its bucket's padded width
+        widths = [w for _, w in splits]
+        assert widths == sorted(widths)
+        for idx, w in splits:
+            assert (np.maximum(ws[idx], 1) <= w).all()
+
+
+def test_split_merges_smallest_class_into_next_larger():
+    # classes: 2 (x3), 4 (x1, the smallest), 8 (x2) -> with budget 2 the
+    # lone width-4 item merges upward into the 8 bucket, never downward
+    ws = [2, 2, 2, 3, 8, 7]
+    splits = split_width_buckets(ws, 2)
+    assert [(sorted(i.tolist()), w) for i, w in splits] == [
+        ([0, 1, 2], 2),
+        ([3, 4, 5], 8),
+    ]
+
+
+def test_split_never_merges_top_class():
+    # smallest-count class IS the top class; the rule must pick the
+    # smallest among the rest (widths only ever grow to a neighbor's)
+    ws = [1, 1, 2, 2, 4]  # counts: {1: 2, 2: 2, 4: 1}
+    splits = split_width_buckets(ws, 2)
+    widths = [w for _, w in splits]
+    assert widths == [2, 4]  # 1-class merged into 2; top class intact
+    _cover(splits, len(ws))
