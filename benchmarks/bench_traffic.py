@@ -1,0 +1,369 @@
+"""Traffic plane: open-loop load, SLO shedding, tenancy, live scores.
+
+Four experiments over one R-MAT graph:
+
+1. **Latency vs offered load** (open-loop Poisson arrivals). Closed-loop
+   benchmarks measure service time; an open-loop generator measures
+   *queueing*: arrivals are stamped on a schedule that never waits for
+   completions, so when offered load crosses the service capacity the
+   backlog — and therefore p99 — must grow. Three offered rates
+   (sub-saturated, near-capacity, saturated vs the measured closed-loop
+   capacity); the gate is the queueing-theory shape: p99 at saturation
+   strictly above p99 at low load.
+
+2. **Workload-driven cache scores on a hub-drift trace.** The paper's
+   degree score assumes popularity tracks degree (Obs. 3.1). This trace
+   breaks the assumption: query popularity is Zipf over a *random
+   permutation* of vertices (popularity ⟂ degree) and the permutation
+   rotates mid-trace (drift). The live frequency-EWMA blend
+   (``WorkloadScorer``) must beat the pure-degree score on host-cache
+   hit rate, and a pure-frequency (blend=1) run must reconcile
+   **bit-exactly** with cachescope's offline ``ewma`` policy replay of
+   the same recorded trace — the live scorer and the offline replayer
+   implement one formula.
+
+3. **Tenant isolation.** Tenant A floods the cache with a uniform scan
+   working set; tenant B re-reads a small hot set. Without cache
+   shares, A's flood evicts B; with 50/50 byte shares and quota-aware
+   eviction, B's hit rate must not degrade. Accounting gate: per-tenant
+   resident bytes sum exactly to ``used_bytes`` on every rank cache,
+   and A's resident bytes never exceed its share cap.
+
+4. **Open-loop vs closed-loop bit-exactness.** The arrival process
+   changes *when* queries enter the scheduler, never *what* they
+   compute: the same query multiset served both ways must produce
+   identical answers (and identical EDF-free result counts).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.graphs.rmat import rmat_graph
+from repro.serving import LiveQueryService, Query, make_queries
+from repro.traffic import (
+    HybridClock,
+    SLOPolicy,
+    TenantQuotas,
+    TenantSpec,
+    VirtualClock,
+    WorkloadScorer,
+    assign_tenants,
+    poisson_arrivals,
+    run_open_loop,
+)
+
+MIX = (0.5, 0.3, 0.2, 0.0)  # lcc / triangles / common_neighbors, no top-k
+
+
+# ---------------------------------------------------------------------------
+# 1. latency vs offered load
+# ---------------------------------------------------------------------------
+def _closed_loop_capacity(csr, queries, *, cache_kib):
+    svc = LiveQueryService(csr, p=4, cache_bytes=cache_kib << 10,
+                           max_batch=64)
+    t0 = time.perf_counter()
+    svc.scheduler.run(queries)
+    wall = time.perf_counter() - t0
+    return len(queries) / max(wall, 1e-9)
+
+
+def _offered_load_curve(csr, queries, *, cache_kib, load_fracs):
+    capacity = _closed_loop_capacity(csr, queries, cache_kib=cache_kib)
+    rows = []
+    for frac in load_fracs:
+        rate = frac * capacity
+        clock = HybridClock()
+        svc = LiveQueryService(
+            csr, p=4, cache_bytes=cache_kib << 10, max_batch=64,
+            max_wait=0.005, clock=clock,
+        )
+        arrivals = poisson_arrivals(len(queries), rate, seed=11)
+        rep = run_open_loop(svc.scheduler, queries, arrivals, clock=clock)
+        lat = rep.summary
+        rows.append({
+            "offered_frac_of_capacity": round(frac, 3),
+            "offered_qps": round(rep.offered_qps, 1),
+            "achieved_qps": round(rep.achieved_qps, 1),
+            "served": rep.n_served,
+            "p50_ms": round(lat.p50_ms, 3),
+            "p99_ms": round(lat.p99_ms, 3),
+        })
+    return capacity, rows
+
+
+# ---------------------------------------------------------------------------
+# 2. hub-drift trace: live EWMA blend vs static degree score
+# ---------------------------------------------------------------------------
+def _hub_drift_queries(n, n_queries, *, seed, zipf_s=1.1, phases=2):
+    """Pair queries whose popularity is Zipf over a random vertex
+    permutation — decoupled from degree — with the permutation rotated
+    every phase (the hot set drifts). Pure-degree scoring protects
+    high-degree rows that this workload never re-reads; a frequency
+    score follows the drift."""
+    rng = np.random.default_rng(seed)
+    w = 1.0 / np.arange(1, n + 1) ** zipf_s
+    w /= w.sum()
+    out = []
+    per = n_queries // phases
+    for _ in range(phases):
+        perm = rng.permutation(n)
+        ranks = rng.choice(n, size=(per, 2), p=w)
+        for u, v in ranks:
+            uu, vv = int(perm[u]), int(perm[v])
+            if uu == vv:
+                vv = int(perm[(v + 1) % n])
+            out.append(Query.common_neighbors(uu, vv))
+    return out
+
+
+def _hit_rate(csr, queries, *, cache_bytes, scorer=None):
+    svc = LiveQueryService(csr, p=4, cache_bytes=cache_bytes,
+                           max_batch=64, scorer=scorer)
+    svc.scheduler.run(queries)
+    st = svc.provider.stats
+    return st.hit_rate, svc
+
+
+def _ewma_vs_degree(csr, *, n_queries, cache_bytes, seed):
+    qs = _hub_drift_queries(csr.n, n_queries, seed=seed)
+    deg_hr, _ = _hit_rate(csr, qs, cache_bytes=cache_bytes)
+    ewma_hr, _ = _hit_rate(
+        csr, qs, cache_bytes=cache_bytes,
+        scorer=WorkloadScorer(blend=0.9, decay=0.98),
+    )
+
+    # Validation: a pure-frequency live run (blend=1 ⇒ score is a
+    # positive linear rescale of the replayer's raw EWMA, f < f_cap
+    # always) recorded through cachescope must reconcile bit-exactly
+    # with the offline "ewma" policy replay of its own trace.
+    from repro.obs import cachescope as obs_cachescope
+
+    rec = obs_cachescope.enable_recording()
+    try:
+        live_hr, svc = _hit_rate(
+            csr, qs, cache_bytes=cache_bytes,
+            scorer=WorkloadScorer(blend=1.0, decay=0.98),
+        )
+    finally:
+        obs_cachescope.disable_recording()
+    report = obs_cachescope.analyze(rec, policies=("deployed", "ewma"))
+    stream0 = next(s for s in report["streams"]
+                   if s["tier"] == "host_cache" and s["rank"] == 0)
+    replay_hr = stream0["replay"]["ewma"]["hit_rate"]
+    st0 = svc.runtime.stats[0]
+    live0_hr = st0.cache_hits / max(st0.cache_hits + st0.cache_misses, 1)
+    return {
+        "degree_hit_rate": round(deg_hr, 4),
+        "ewma_hit_rate": round(ewma_hr, 4),
+        "ewma_hit_rate_gain": round(ewma_hr - deg_hr, 4),
+        "ewma_beats_degree_hit_rate": bool(ewma_hr > deg_hr),
+        "pure_freq_live_hit_rate": round(live0_hr, 6),
+        "pure_freq_replay_hit_rate": round(replay_hr, 6),
+        "ewma_matches_offline_replay": bool(
+            abs(live0_hr - replay_hr) < 1e-12
+        ),
+        "n_queries": len(qs),
+    }
+
+
+# ---------------------------------------------------------------------------
+# 3. tenant isolation
+# ---------------------------------------------------------------------------
+def _tenant_queries(csr, *, n_queries, seed, hot_set=24, flood_ratio=3):
+    """Interleave tenant A's uniform flood with tenant B's re-reads of
+    a small fixed hot set (the cacheable customer)."""
+    rng = np.random.default_rng(seed)
+    hot = rng.choice(csr.n, size=hot_set, replace=False)
+    out = []
+    for i in range(n_queries):
+        if i % (flood_ratio + 1) < flood_ratio:  # tenant A: flood
+            u, v = rng.integers(0, csr.n, size=2)
+            q = Query.common_neighbors(int(u), int(v if v != u else (u + 1) % csr.n))
+            out.append((q, "A"))
+        else:  # tenant B: hot-set re-reads
+            u, v = rng.choice(hot, size=2, replace=False)
+            out.append((Query.common_neighbors(int(u), int(v)), "B"))
+    return out
+
+
+def _run_tenants(csr, tagged, *, cache_bytes, shares):
+    import dataclasses as _dc
+
+    specs = [
+        TenantSpec("A", rate_qps=1e9, burst=1e9,
+                   cache_share=0.5 if shares else 0.0),
+        TenantSpec("B", rate_qps=1e9, burst=1e9,
+                   cache_share=0.5 if shares else 0.0),
+    ]
+    quotas = TenantQuotas(specs)
+    svc = LiveQueryService(csr, p=4, cache_bytes=cache_bytes,
+                           max_batch=64, quotas=quotas)
+    qs = [_dc.replace(q, tenant=t) for q, t in tagged]
+    svc.scheduler.run(qs)
+    st = svc.runtime.stats[0]
+    # per-tenant hit rates out of the tenant request/byte ledgers need a
+    # per-tenant probe: rerun B's hot set through the cache read path and
+    # count hits directly instead — simpler and exact: use the per-class
+    # latency? No: measure via a second pass of B-only queries with stats
+    # deltas.
+    hits0, miss0 = st.cache_hits, st.cache_misses
+    b_qs = [q for q in qs if q.tenant == "B"]
+    svc.scheduler.run(b_qs)
+    st = svc.runtime.stats[0]
+    b_hits = st.cache_hits - hits0
+    b_gets = b_hits + (st.cache_misses - miss0)
+    caches = svc.runtime.caches
+    tb_sum_exact = all(
+        sum(c.tenant_bytes().values()) == c.used_bytes for c in caches
+    )
+    a_within_cap = all(
+        c.tenant_bytes().get("A", 0) <= int(0.5 * c.capacity) or not shares
+        for c in caches
+    )
+    return {
+        "b_probe_hit_rate": round(b_hits / max(b_gets, 1), 4),
+        "accounting_exact": bool(tb_sum_exact),
+        "a_within_share_cap": bool(a_within_cap),
+        "tenant_bytes_rank0": {
+            t or "_": b for t, b in sorted(caches[0].tenant_bytes().items())
+        },
+    }
+
+
+def _tenant_isolation(csr, *, n_queries, cache_bytes, seed):
+    tagged = _tenant_queries(csr, n_queries=n_queries, seed=seed)
+    free = _run_tenants(csr, tagged, cache_bytes=cache_bytes, shares=False)
+    iso = _run_tenants(csr, tagged, cache_bytes=cache_bytes, shares=True)
+    return {
+        "b_hit_rate_no_shares": free["b_probe_hit_rate"],
+        "b_hit_rate_with_shares": iso["b_probe_hit_rate"],
+        "tenant_bytes_rank0": iso["tenant_bytes_rank0"],
+        "tenant_isolation_holds": bool(
+            iso["b_probe_hit_rate"] >= free["b_probe_hit_rate"]
+            and iso["a_within_share_cap"]
+        ),
+        "tenant_accounting_exact": bool(
+            free["accounting_exact"] and iso["accounting_exact"]
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# 4. open-loop vs closed-loop bit-exactness
+# ---------------------------------------------------------------------------
+def _open_vs_closed(csr, queries, *, cache_bytes):
+    svc_c = LiveQueryService(csr, p=4, cache_bytes=cache_bytes,
+                             max_batch=64)
+    closed = svc_c.scheduler.run(queries)
+
+    clock = VirtualClock()
+    svc_o = LiveQueryService(csr, p=4, cache_bytes=cache_bytes,
+                             max_batch=64, clock=clock)
+    arrivals = poisson_arrivals(len(queries), 500.0, seed=3)
+    rep = run_open_loop(svc_o.scheduler, queries, arrivals, clock=clock)
+
+    def _key(q):
+        return (q.kind, q.u, q.v, q.k)
+
+    want = {}
+    for r in closed:
+        want.setdefault(_key(r.query), set()).add(
+            (r.value, None if r.ids is None else tuple(map(int, r.ids)))
+        )
+    exact = rep.n_served == len(closed) == len(queries) and all(
+        (r.value, None if r.ids is None else tuple(map(int, r.ids)))
+        in want[_key(r.query)]
+        for r in rep.results
+    )
+    return {
+        "n_closed": len(closed),
+        "n_open": rep.n_served,
+        "open_loop_bit_exact": bool(exact),
+    }
+
+
+# ---------------------------------------------------------------------------
+def run(quick: bool = True):
+    scale = 9 if quick else 11
+    edge_factor = 8
+    n_queries = 600 if quick else 2000
+    cache_kib = 4 if quick else 16
+    csr = rmat_graph(scale, edge_factor, seed=0)
+    out = {
+        "scale": scale,
+        "edge_factor": edge_factor,
+        "n_queries": n_queries,
+        "paper_ref": ("production traffic plane over the §III-B2 serving "
+                      "stack: open-loop load, SLOs, tenancy, live scores"),
+    }
+
+    # 1. latency vs offered load (>=3 offered rates)
+    qs = make_queries(csr.degrees, n_queries, kind="zipf", mix=MIX, seed=1)
+    # the sub-saturated anchor sits well under capacity: the open-loop
+    # harness adds per-arrival host overhead on top of engine service
+    # time, so mid fractions already queue (which the curve shows).
+    capacity, rows = _offered_load_curve(
+        csr, qs, cache_kib=cache_kib, load_fracs=(0.1, 0.6, 2.5)
+    )
+    out["closed_loop_capacity_qps"] = round(capacity, 1)
+    out["offered_load_rows"] = rows
+    out["p99_rises_under_saturation"] = bool(
+        rows[-1]["p99_ms"] > rows[0]["p99_ms"]
+    )
+
+    # 2. hub-drift: live EWMA blend vs degree + offline-replay identity
+    out["hub_drift"] = _ewma_vs_degree(
+        csr, n_queries=2 * n_queries, cache_bytes=cache_kib << 10, seed=5
+    )
+    out["ewma_beats_degree_hit_rate"] = \
+        out["hub_drift"]["ewma_beats_degree_hit_rate"]
+    out["ewma_matches_offline_replay"] = \
+        out["hub_drift"]["ewma_matches_offline_replay"]
+    out["ewma_hit_rate_gain"] = out["hub_drift"]["ewma_hit_rate_gain"]
+
+    # 3. tenant isolation + exact cache-share accounting
+    out["tenants"] = _tenant_isolation(
+        csr, n_queries=n_queries, cache_bytes=cache_kib << 10, seed=7
+    )
+    out["tenant_isolation_holds"] = out["tenants"]["tenant_isolation_holds"]
+    out["tenant_accounting_exact"] = \
+        out["tenants"]["tenant_accounting_exact"]
+
+    # 4. open-loop vs closed-loop answers
+    out["open_vs_closed"] = _open_vs_closed(
+        csr, qs, cache_bytes=cache_kib << 10
+    )
+    out["open_loop_bit_exact"] = out["open_vs_closed"]["open_loop_bit_exact"]
+
+    # one SLO+tenant open-loop run folded into the suite metrics snapshot
+    from repro.obs.metrics import record_cachescope  # noqa: F401  (import check)
+
+    clock = HybridClock()
+    quotas = TenantQuotas.uniform(3, rate_qps=0.5 * capacity / 3)
+    svc = LiveQueryService(
+        csr, p=4, cache_bytes=cache_kib << 10, max_batch=64,
+        slo=SLOPolicy(headroom_s=0.005), quotas=quotas, clock=clock,
+        scorer=WorkloadScorer(),
+    )
+    tagged = assign_tenants(qs, quotas.tenants,
+                            rng=np.random.default_rng(9))
+    arrivals = poisson_arrivals(len(tagged), capacity, seed=13)
+    rep = run_open_loop(svc.scheduler, tagged, arrivals, clock=clock)
+    lat = rep.summary
+    out["slo_run"] = {
+        "offered_qps": round(rep.offered_qps, 1),
+        "served": rep.n_served,
+        "slo_hit_rate": round(lat.slo_hit_rate, 4),
+        "shed_rate_by_class": lat.shed_rate_by_class,
+        "quota_shed": svc.scheduler.n_shed_quota,
+    }
+    out["_metrics_snapshot"] = svc.metrics_registry().to_dict()
+    return out
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=1))

@@ -37,6 +37,7 @@ METRICS = {
     "device_tier.device_hit_rate_zipf": "higher",
     "cache_size_fig7.max_comm_reduction_adj_only": "higher",
     "cache_size_fig7.mattson_speedup": "higher",
+    "traffic_plane.ewma_hit_rate_gain": "higher",
 }
 
 # metric path -> must be truthy in the current run
@@ -49,6 +50,12 @@ BOOLEANS = [
     "serving_queries.cache_trace_overhead_ok",
     "scores_fig8.replay_reconciled",
     "cache_size_fig7.mattson_matches_direct",
+    "traffic_plane.p99_rises_under_saturation",
+    "traffic_plane.ewma_beats_degree_hit_rate",
+    "traffic_plane.ewma_matches_offline_replay",
+    "traffic_plane.tenant_isolation_holds",
+    "traffic_plane.tenant_accounting_exact",
+    "traffic_plane.open_loop_bit_exact",
 ]
 
 

@@ -41,6 +41,7 @@ def main(argv=None):
         bench_spmd_scaling,
         bench_streaming,
         bench_strong_scaling,
+        bench_traffic,
     )
 
     suites = {
@@ -55,6 +56,7 @@ def main(argv=None):
         "device_tier": lambda: bench_device_tier.run(quick),
         "schedule_rebuild": lambda: bench_schedule_rebuild.run(quick),
         "spmd_scaling": lambda: bench_spmd_scaling.run(quick),
+        "traffic_plane": lambda: bench_traffic.run(quick),
         "roofline": lambda: bench_roofline.run(),
     }
     if args.only:
@@ -233,6 +235,37 @@ def checklist(results):
             "SPMD execution: measured all_to_all traffic == modeled "
             "serve matrix on every run (rows and payload bytes)",
             sp["model_agreement_all"],
+        ))
+    tp = results.get("traffic_plane", {})
+    if "p99_rises_under_saturation" in tp:
+        lo, hi = tp["offered_load_rows"][0], tp["offered_load_rows"][-1]
+        checks.append((
+            f"traffic: open-loop p99 grows with offered load "
+            f"({lo['p99_ms']:.0f} ms @ {lo['offered_frac_of_capacity']}x "
+            f"-> {hi['p99_ms']:.0f} ms @ "
+            f"{hi['offered_frac_of_capacity']}x capacity)",
+            tp["p99_rises_under_saturation"],
+        ))
+        checks.append((
+            f"traffic: live EWMA blend beats pure degree by "
+            f"{tp['ewma_hit_rate_gain']:+.1%} hit rate on the "
+            f"hub-drift trace; live pure-frequency run reconciles "
+            f"bit-exactly with cachescope's offline ewma replay",
+            tp["ewma_beats_degree_hit_rate"]
+            and tp["ewma_matches_offline_replay"],
+        ))
+        checks.append((
+            f"traffic: 50/50 cache shares protect tenant B's hit rate "
+            f"({tp['tenants']['b_hit_rate_no_shares']:.0%} -> "
+            f"{tp['tenants']['b_hit_rate_with_shares']:.0%} under "
+            f"tenant A's flood); per-tenant bytes sum exactly to "
+            f"used_bytes",
+            tp["tenant_isolation_holds"] and tp["tenant_accounting_exact"],
+        ))
+        checks.append((
+            "traffic: open-loop arrivals change when queries run, "
+            "never what they answer (bit-exact vs closed loop)",
+            tp["open_loop_bit_exact"],
         ))
     for msg, ok in checks:
         print(("PASS " if ok else "FAIL ") + msg)

@@ -91,11 +91,17 @@ class CacheStats:
 def merge_counter_dataclasses(cls, items):
     """Field-wise sum over flat numeric-counter dataclasses (per-rank
     statistics aggregation). Enumerates ``dataclasses.fields`` so a new
-    counter can never be silently dropped from an aggregate."""
+    counter can never be silently dropped from an aggregate. Dict-valued
+    fields (per-tenant counters) merge key-wise."""
     out = cls()
     for s in items:
         for f in dataclasses.fields(cls):
-            setattr(out, f.name, getattr(out, f.name) + getattr(s, f.name))
+            cur, add = getattr(out, f.name), getattr(s, f.name)
+            if isinstance(cur, dict):
+                for k, v in add.items():
+                    cur[k] = cur.get(k, 0) + v
+            else:
+                setattr(out, f.name, cur + add)
     return out
 
 
@@ -111,6 +117,10 @@ class _Entry:
     size: int
     last_use: int
     score: Optional[float]  # application-defined; None => LRU+positional
+    # multi-tenant serving: who fetched this row first (quota-aware
+    # eviction keys on it). Must stay LAST with a default — cachescope's
+    # replay preload constructs _Entry positionally without it.
+    tenant: str = ""
 
 
 class ClampiCache:
@@ -149,6 +159,36 @@ class ClampiCache:
         self._seen: set[int] = set()
         self._conflicts = 0
         self._evicted_sizes: Dict[int, int] = {}  # victim key -> size
+        # multi-tenant byte reservations: tenant -> fraction of capacity.
+        # Empty (default) = tenancy off, every path bit-identical to the
+        # single-tenant cache. NOTE: tenant-share eviction consults state
+        # a recorded access trace does not carry, so runs with shares
+        # active must not assert cachescope's deployed-replay invariant
+        # (see docs/serving.md).
+        self.tenant_shares: Dict[str, float] = {}
+
+    # ---------------- multi-tenant accounting ----------------
+    def set_tenant_shares(self, shares: Dict[str, float]) -> None:
+        """Install per-tenant byte-share fractions (hard caps for tagged
+        tenants; untagged traffic is best-effort in the remainder)."""
+        assert all(0.0 < v <= 1.0 for v in shares.values())
+        assert sum(shares.values()) <= 1.0 + 1e-9, "shares oversubscribed"
+        self.tenant_shares = dict(shares)
+
+    def tenant_bytes(self) -> Dict[str, int]:
+        """Resident bytes per tenant ("" = untagged). Computed from the
+        entry table so it can never drift from ``used_bytes``: the two
+        sum identically by construction."""
+        out: Dict[str, int] = {}
+        for e in self.entries.values():
+            out[e.tenant] = out.get(e.tenant, 0) + e.size
+        return out
+
+    def _share_cap(self, tenant: str) -> Optional[float]:
+        if not tenant or not self.tenant_shares:
+            return None
+        share = self.tenant_shares.get(tenant)
+        return None if share is None else share * self.capacity
 
     # ---------------- memory buffer management ----------------
     def _alloc(self, size: int) -> Optional[int]:
@@ -184,8 +224,9 @@ class ClampiCache:
         return gain / max(e.size, 1)
 
     # ---------------- victim selection ----------------
-    def _select_victim(self) -> _Entry:
-        entries = list(self.entries.values())
+    def _select_victim(self, entries: Optional[List[_Entry]] = None) -> _Entry:
+        if entries is None:
+            entries = list(self.entries.values())
         has_user = any(e.score is not None for e in entries)
         if has_user:
             # paper §III-B2: application score dominates; positional/spatial
@@ -205,12 +246,16 @@ class ClampiCache:
         )
 
     # ---------------- public API ----------------
-    def get(self, key: int, size: int, *, score: Optional[float] = None) -> bool:
+    def get(self, key: int, size: int, *, score: Optional[float] = None,
+            tenant: str = "") -> bool:
         """One RMA get of ``size`` bytes for entry ``key``.
 
         Returns True on hit. On miss, models the remote read and tries to
         cache the entry (CLaMPI caches a missing entry only if resources
-        allow after eviction attempts).
+        allow after eviction attempts). ``tenant`` tags the entry for
+        quota-aware eviction; a hit keeps the original owner tag
+        (first-fetcher semantics — shared rows stay charged to whoever
+        brought them in).
         """
         rec = obs_cachescope._recorder  # one load + None check when off
         if rec is not None:
@@ -242,24 +287,41 @@ class ClampiCache:
         st.comm_time += self.net.remote(size)
         if rec is not None:
             rec.on_get(self, key, size, score, False)
-        self._insert(key, size, score)
+        self._insert(key, size, score, tenant)
         if self.adaptive:
             self._maybe_resize()
         return False
 
-    def _insert(self, key: int, size: int, score: Optional[float]) -> None:
+    def _insert(self, key: int, size: int, score: Optional[float],
+                tenant: str = "") -> None:
         if size > self.capacity:
             return
+        cap = self._share_cap(tenant)
+        if cap is not None:
+            if size > cap:
+                return  # one entry larger than the tenant's whole share
+            # evict-own-first: a tenant over its reservation reclaims
+            # from itself before touching shared space — the isolation
+            # contract. Refusal (own victims all score higher) means the
+            # incoming entry loses to the tenant's own working set.
+            while self.tenant_bytes().get(tenant, 0) + size > cap:
+                own = [e for e in self.entries.values()
+                       if e.tenant == tenant]
+                if not own or not self._evict_one(
+                    need_better_than=score, candidates=own
+                ):
+                    return
         # victim loop: evict while out of table slots or buffer space
         while True:
             if len(self.entries) >= self.table_slots:
-                self._evict_one(need_better_than=score)
+                self._evict_one(need_better_than=score, requester=tenant)
                 if len(self.entries) >= self.table_slots:
                     return  # refused (new entry scored lower than victims)
                 continue
             addr = self._alloc(size)
             if addr is not None:
-                self.entries[key] = _Entry(key, addr, size, self.clock, score)
+                self.entries[key] = _Entry(key, addr, size, self.clock,
+                                           score, tenant)
                 self.stats.comm_time += self.net.insert_cost
                 if obs_trace.fine_enabled():  # per-entry; fine mode only
                     obs_trace.instant("cache_admit", cat="cache",
@@ -267,13 +329,36 @@ class ClampiCache:
                 return
             if not self.entries:
                 return
-            if not self._evict_one(need_better_than=score):
+            if not self._evict_one(need_better_than=score, requester=tenant):
                 return
 
-    def _evict_one(self, need_better_than: Optional[float] = None) -> bool:
+    def _quota_candidates(self, requester: str) -> List[_Entry]:
+        """Victim pool under tenancy: the requester's own entries,
+        untagged entries, and tenants at-or-over their reserved share.
+        Tenants strictly *under* their share are spared — that working
+        set is exactly what the reservation protects. Falls back to
+        everything when the protected set is the whole cache."""
+        if not self.tenant_shares:
+            return list(self.entries.values())
+        tb = self.tenant_bytes()
+        under = {
+            t for t, share in self.tenant_shares.items()
+            if tb.get(t, 0) < share * self.capacity
+        }
+        pool = [e for e in self.entries.values()
+                if e.tenant == requester or e.tenant not in under]
+        return pool if pool else list(self.entries.values())
+
+    def _evict_one(self, need_better_than: Optional[float] = None,
+                   requester: str = "",
+                   candidates: Optional[List[_Entry]] = None) -> bool:
         if not self.entries:
             return False
-        v = self._select_victim()
+        if candidates is None:
+            candidates = self._quota_candidates(requester)
+        if not candidates:
+            return False
+        v = self._select_victim(candidates)
         if (
             need_better_than is not None
             and v.score is not None

@@ -92,6 +92,11 @@ class ProviderStats:
     stale_payloads_dropped: int = 0
     bytes_fetched: int = 0  # remote bytes actually moved (post-cache)
     modeled_comm_s: float = 0.0
+    # multi-tenant accounting (empty until tenant-tagged fetches occur;
+    # merge_counter_dataclasses sums dict fields key-wise)
+    tenant_requests: Dict[str, int] = dataclasses.field(default_factory=dict)
+    tenant_bytes_fetched: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def hit_rate(self) -> float:
@@ -197,6 +202,11 @@ class ShardedRuntime:
         # executor's resident shard buffer): called with the changed-id
         # list on every invalidate, and with None on a store swap.
         self._invalidation_listeners: list = []
+        # optional live workload scorer (traffic.WorkloadScorer): when
+        # attached, cache admission scores come from its EWMA×degree
+        # blend instead of the static degree prior, and device-tier
+        # selection reads the same scorer via score_fn.
+        self.scorer = None
         if self._device_slots and self.store is not None:
             self.enable_device_tier(self._device_slots, self._device_width)
 
@@ -310,6 +320,33 @@ class ShardedRuntime:
         if fn not in self._invalidation_listeners:
             self._invalidation_listeners.append(fn)
 
+    def attach_scorer(self, scorer) -> None:
+        """Install a live workload scorer (``traffic.WorkloadScorer``):
+        every remote read through the host cache observes the vertex and
+        scores admission by the EWMA×degree blend; the device tier's
+        selection reads the same scorer (applied on its next rebuild —
+        call ``refresh_device_scores()`` to force one)."""
+        self.scorer = scorer
+        if scorer is not None and self.store is not None:
+            scorer.set_degree_scale(float(np.max(self.store.degrees,
+                                                 initial=1)))
+        for dev in self.device_views():
+            dev.score_fn = (None if scorer is None
+                            else scorer.score_array)
+
+    def refresh_device_scores(self) -> int:
+        """Re-rank the device tier under the current workload scores
+        (no-op without a scorer or tier). Returns rebuilds performed.
+        Called between serving windows, never inside one — rebuilds bump
+        slot epochs, which would fault in-flight residency handles."""
+        views = self.device_views()
+        if self.scorer is None or not views:
+            return 0
+        for dev in views:
+            dev.score_fn = self.scorer.score_array
+            dev.rebuild()
+        return len(views)
+
     def build_static_cache(self, capacity_rows: int) -> StaticDegreeCache:
         """Install a shared top-C degree-scored resident set."""
         deg = np.asarray(self.store.degrees)
@@ -330,6 +367,7 @@ class ShardedRuntime:
         rank: int,
         vertices: Sequence[int],
         record: Optional[List[FetchEvent]] = None,
+        tenants: Optional[Dict[int, str]] = None,
     ) -> Dict[int, np.ndarray]:
         """Sorted adjacency row per distinct vertex, as read by ``rank``.
 
@@ -344,19 +382,29 @@ class ShardedRuntime:
         the all_to_all collective — by construction the recorded
         ``"miss"`` events are exactly the reads this same call charged to
         ``serve_rows``, so the measured collective traffic reconciles
-        against the model without a second bookkeeping path."""
+        against the model without a second bookkeeping path.
+
+        ``tenants`` (optional) maps vertex -> tenant tag: tagged reads
+        are charged to the tenant in ``ProviderStats`` and tag the
+        cache entry they admit (quota-aware eviction)."""
         rank = int(rank)
         with obs_trace.span("fetch_rows", rank=rank, cat="runtime",
                             n=len(vertices)):
-            return self._fetch_rows_impl(rank, vertices, record)
+            return self._fetch_rows_impl(rank, vertices, record, tenants)
 
     def _fetch_rows_impl(
         self,
         rank: int,
         vertices: Sequence[int],
         record: Optional[List[FetchEvent]],
+        tenants: Optional[Dict[int, str]] = None,
     ) -> Dict[int, np.ndarray]:
         st = self.stats[rank]
+        if tenants:
+            for v in vertices:
+                t = tenants.get(int(v), "")
+                if t:
+                    st.tenant_requests[t] = st.tenant_requests.get(t, 0) + 1
         out: Dict[int, np.ndarray] = {}
         store = self.store
         dev = self.device_for(rank)
@@ -384,6 +432,11 @@ class ShardedRuntime:
                 st.cache_misses += 1
                 size = row.size * ID_BYTES
                 st.bytes_fetched += size
+                tenant = tenants.get(v, "") if tenants else ""
+                if tenant:
+                    st.tenant_bytes_fetched[tenant] = (
+                        st.tenant_bytes_fetched.get(tenant, 0) + size
+                    )
                 st.modeled_comm_s += self.net.remote(size)
                 self.serve_rows[owner, rank] += 1
                 out[v] = row
@@ -393,6 +446,7 @@ class ShardedRuntime:
         cache = self.caches[rank]
         payloads = self._payloads[rank]
         deg = store.degrees
+        scorer = self.scorer
         for v in vertices:
             v = int(v)
             owner = int(self.part.owner(v))
@@ -417,8 +471,16 @@ class ShardedRuntime:
                     continue
             d = int(deg[v])
             size = d * ID_BYTES
-            score = float(d) if self.use_degree_score else None
-            if cache.get(v, size, score=score):
+            tenant = tenants.get(v, "") if tenants else ""
+            if scorer is not None:
+                # tick the EWMA at the cache-probe point — the same
+                # place cachescope's trace ticks its access counter, so
+                # the live frequency matches the offline replay's
+                scorer.observe(v)
+                score = scorer.cache_score(v, d)
+            else:
+                score = float(d) if self.use_degree_score else None
+            if cache.get(v, size, score=score, tenant=tenant):
                 st.cache_hits += 1
                 row = payloads.get(v)
                 if row is None:
@@ -435,6 +497,10 @@ class ShardedRuntime:
                 continue
             st.cache_misses += 1
             st.bytes_fetched += size
+            if tenant:
+                st.tenant_bytes_fetched[tenant] = (
+                    st.tenant_bytes_fetched.get(tenant, 0) + size
+                )
             self.serve_rows[owner, rank] += 1
             row = store.row(v).copy()
             if cache.contains(v):  # admitted after the miss

@@ -102,12 +102,33 @@ class ResidencyManager:
         self.rows = None  # device buffer, set by _sync_device
         self.stats = ResidencyStats()
         self.rebuilds = 0
+        # optional workload-driven selection score: callable
+        # degrees -> per-vertex score array (e.g. the traffic plane's
+        # EWMA×degree blend). None = the paper's pure-degree prior,
+        # bit-identical to the pre-hook behavior. Takes effect on the
+        # next rebuild()/notify_batch().
+        self.score_fn = None
         self.rebuild()
 
     # ---------------- selection ----------------
+    def _selection_scores(self, deg: np.ndarray) -> Optional[np.ndarray]:
+        """Workload scores (float) when a score_fn is attached, else
+        None (degree prior)."""
+        if self.score_fn is None:
+            return None
+        return np.asarray(self.score_fn(deg), np.float64)
+
     def _eligible_scores(self) -> np.ndarray:
         deg = np.asarray(self.store.degrees, np.int64)
-        score = np.where((deg > 0) & (deg <= self.max_width), deg, -1)
+        sc = self._selection_scores(deg)
+        base = deg if sc is None else sc
+        # eligibility stays structural (nonzero degree, fits the padded
+        # width) regardless of what scores the ranking: a workload score
+        # cannot admit a row the buffer cannot hold. NOTE rebuild keeps
+        # only score > 0 — with a pure-frequency score (blend=1.0) a
+        # never-accessed row scores 0 and is excluded; keep blend < 1 so
+        # the degree term breaks ties among cold rows (docs/serving.md).
+        score = np.where((deg > 0) & (deg <= self.max_width), base, -1)
         if self.exclude_range is not None:
             lo, hi = self.exclude_range
             score[lo:hi] = -1  # owned rows are local reads — never cached
@@ -319,22 +340,33 @@ class ResidencyManager:
                 self.stats.patches += 1
             touched.append(s)
         # 2. score-driven admission: mutated outsiders displace the
-        #    weakest resident only on a STRICT score win (no tie churn)
+        #    weakest resident only on a STRICT score win (no tie churn).
+        #    With a workload score_fn attached, "weakest" and the
+        #    candidate ranking use the blended score instead of degree.
         cand = changed[slots < 0]
         cand = cand[(deg[cand] > 0) & (deg[cand] <= self.max_width)]
         if self.exclude_range is not None:
             lo, hi = self.exclude_range
             cand = cand[(cand < lo) | (cand >= hi)]
         if cand.size:
-            cand = cand[np.argsort(-deg[cand], kind="stable")]
+            sc = self._selection_scores(deg)
+            key = deg if sc is None else sc
+            cand = cand[np.argsort(-key[cand], kind="stable")]
             for v in cand.tolist():
                 v = int(v)
                 free = np.flatnonzero(self.slot_ids < 0)
                 if free.size:
                     s = int(free[0])
-                else:
+                elif sc is None:
                     s = int(np.argmin(self.widths))
                     if int(deg[v]) <= int(self.widths[s]):
+                        break  # weakest resident >= best candidate left
+                    self._evict(s)
+                    touched.append(s)
+                else:
+                    res_sc = sc[self.slot_ids]  # no free slot: all occupied
+                    s = int(np.argmin(res_sc))
+                    if float(sc[v]) <= float(res_sc[s]):
                         break  # weakest resident >= best candidate left
                     self._evict(s)
                     touched.append(s)

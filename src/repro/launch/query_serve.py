@@ -5,6 +5,8 @@ queries with cache-backed remote reads over a live R-MAT graph.
     python -m repro.launch.query_serve --scale 12 --queries 4000 \
         --workload zipf --batch-window 64 --write-frac 0.2 --p 8
     python -m repro.launch.query_serve --smoke --ranks 4   # cross-rank
+    python -m repro.launch.query_serve --smoke --open-loop poisson \
+        --rate 500 --slo --tenants 3                       # traffic plane
 
 Builds the graph, stands up a ``LiveQueryService`` over the shared
 ``ShardedRuntime`` (streaming engine + degree-scored cache-backed row
@@ -12,6 +14,20 @@ providers + microbatching scheduler), and drives a closed-loop
 read-write workload: query groups drain through the scheduler in
 ``--batch-window`` microbatches, update batches mutate the store and
 invalidate cached rows through the runtime's targeted coherence fanout.
+
+``--open-loop {poisson,diurnal,burst,trace:PATH}`` switches the driver
+from the closed-loop read-write stream to **open-loop** arrivals at
+``--rate`` offered q/s: queries enter the scheduler at sampled arrival
+times that never wait for completions, so the reported latency includes
+real queueing delay (the latency-vs-offered-load regime). Open-loop
+runs are queries-only (the write stream is disabled). ``--slo`` turns
+on per-class deadlines with EDF window selection and SLO-aware
+flush/shed; ``--tenants N`` stands up N symmetric tenants with
+token-bucket admission and cache byte shares; ``--ewma-scores``
+replaces the static degree cache score with the live
+request-frequency×degree blend. One ``--seed`` drives graph, workload,
+arrivals, and tenant assignment through independent spawned streams —
+the whole run is bit-reproducible.
 
 ``--ranks p`` switches on **cross-rank serving**: p provider/engine
 instances over one runtime, every query routed to the rank that owns its
@@ -81,6 +97,44 @@ def main(argv=None):
                     help="load shedding: poll() drops queries that "
                          "already waited this long instead of serving "
                          "them (reason 'deadline')")
+    ap.add_argument("--open-loop", default=None, metavar="PROC",
+                    help="open-loop arrivals instead of the closed-loop "
+                         "stream: poisson | diurnal | burst | trace:PATH "
+                         "(queries-only; latency includes queueing delay)")
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="offered load in queries/s for --open-loop")
+    ap.add_argument("--arrivals-out", default=None, metavar="PATH",
+                    help="with --open-loop: save the sampled arrival "
+                         "trace for exact replay (trace:PATH)")
+    ap.add_argument("--slo", action="store_true",
+                    help="per-class deadlines (EDF window selection, "
+                         "SLO-aware flush, shed past deadline with "
+                         "reason 'slo', per-class shed rates)")
+    ap.add_argument("--slo-scale", type=float, default=1.0,
+                    help="multiply every class deadline (tighten <1, "
+                         "relax >1)")
+    ap.add_argument("--slo-headroom-ms", type=float, default=5.0,
+                    help="dispatch a window this far before its most "
+                         "urgent deadline (margin for batch service "
+                         "time + poll granularity)")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="N symmetric tenants: token-bucket admission "
+                         "(shed reason 'quota') + even cache byte "
+                         "shares with quota-aware eviction")
+    ap.add_argument("--tenant-qps", type=float, default=100.0,
+                    help="per-tenant sustained admission rate")
+    ap.add_argument("--tenant-burst", type=float, default=16.0,
+                    help="per-tenant token-bucket burst depth")
+    ap.add_argument("--ewma-scores", action="store_true",
+                    help="live workload-driven cache scores: blend the "
+                         "request-frequency EWMA with degree for both "
+                         "the host caches and the device tier")
+    ap.add_argument("--ewma-blend", type=float, default=0.7,
+                    help="frequency weight in the blended score "
+                         "(0 = pure degree; must be < 1 so cold rows "
+                         "stay device-tier eligible)")
+    ap.add_argument("--ewma-decay", type=float, default=0.98,
+                    help="per-access EWMA decay (cachescope-identical)")
     ap.add_argument("--device-tier", action="store_true",
                     help="enable the device-resident hot-row cache tier "
                          "(persistent TPU residency for hub adjacency; "
@@ -130,6 +184,26 @@ def main(argv=None):
         ap.error("--device-scope shapes the device tier; pass --device-tier")
     if args.trace_fine and not args.trace:
         ap.error("--trace-fine needs --trace")
+    if args.open_loop is not None:
+        known = ("poisson", "diurnal", "burst")
+        if args.open_loop not in known and \
+                not args.open_loop.startswith("trace:"):
+            ap.error(f"--open-loop must be one of {known} or trace:PATH")
+        if args.rate <= 0.0:
+            ap.error("--rate must be positive")
+        args.write_frac = 0.0  # open-loop runs are queries-only
+    if args.arrivals_out and not args.open_loop:
+        ap.error("--arrivals-out records the --open-loop arrival trace")
+    if args.tenants < 0:
+        ap.error("--tenants must be >= 0")
+    if args.ewma_scores and not 0.0 <= args.ewma_blend < 1.0:
+        ap.error("--ewma-blend must be in [0, 1): the device tier only "
+                 "admits rows with positive scores, so pure frequency "
+                 "(1.0) would exclude every not-yet-requested row")
+    if args.ewma_scores and args.cache_trace:
+        print("note: --ewma-scores + --cache-trace — offline replay "
+              "gates that assume the deployed degree policy (and any "
+              "tenant cache shares) do not hold on this trace")
     tracer = None
     if args.trace:
         from ..obs import trace as obs_trace
@@ -154,6 +228,38 @@ def main(argv=None):
     from ..core.triangles import lcc_scores, triangles_per_vertex
     from ..graphs.rmat import rmat_graph
     from ..serving import LiveQueryService, QueryKind, read_write_stream
+
+    # One --seed, independent derived streams: the graph and the
+    # closed-loop workload keep the raw seed (bit-compatible with every
+    # pre-traffic-plane run), arrivals and tenant assignment get spawned
+    # children so adding --tenants never perturbs the arrival times.
+    seed_root = np.random.SeedSequence(args.seed)
+    arrival_seed, tenant_seed = (
+        int(c.generate_state(1)[0]) for c in seed_root.spawn(2)
+    )
+
+    slo = quotas = scorer = clock = None
+    if args.slo:
+        from ..traffic import SLOPolicy
+
+        slo = SLOPolicy(
+            headroom_s=args.slo_headroom_ms * 1e-3
+        ).scaled(args.slo_scale)
+    if args.tenants:
+        from ..traffic import TenantQuotas
+
+        quotas = TenantQuotas.uniform(
+            args.tenants, rate_qps=args.tenant_qps, burst=args.tenant_burst
+        )
+    if args.ewma_scores:
+        from ..traffic import WorkloadScorer
+
+        scorer = WorkloadScorer(blend=args.ewma_blend,
+                                decay=args.ewma_decay)
+    if args.open_loop:
+        from ..traffic import HybridClock
+
+        clock = HybridClock()
 
     n = 1 << args.scale
     csr = rmat_graph(args.scale, args.edge_factor, seed=args.seed)
@@ -182,68 +288,149 @@ def main(argv=None):
         execution="spmd" if args.spmd else "loop",
         pipeline=args.pipeline,
         device_scope=args.device_scope,
+        slo=slo,
+        quotas=quotas,
+        scorer=scorer,
+        clock=clock,
     )
 
-    # 2x safety factor: event kinds are drawn i.i.d., so an unlucky
-    # write-heavy prefix must not end the stream before --queries served
-    n_query_events = -(-args.queries // args.queries_per_event)
-    n_events = int(2 * n_query_events / (1.0 - args.write_frac)) + 1
     served = 0
     n_updates = 0
     n_verified = 0
+    open_report = None
+
+    def _verify_results(results):
+        nonlocal n_verified
+        snap = svc.store.to_csr()
+        t_ref = triangles_per_vertex(snap)
+        lcc_ref = lcc_scores(snap, t_ref)
+        for r in results:
+            q = r.query
+            if q.kind == QueryKind.TRIANGLES:
+                assert r.value == t_ref[q.u], (q, r.value, t_ref[q.u])
+            elif q.kind == QueryKind.LCC:
+                assert r.value == lcc_ref[q.u], (q, r.value, lcc_ref[q.u])
+            elif q.kind == QueryKind.COMMON_NEIGHBORS:
+                want = np.intersect1d(snap.row(q.u), snap.row(q.v))
+                assert r.value == want.size and np.array_equal(r.ids, want)
+            else:  # TOP_K_LCC: compare ranking vs the recount
+                order = np.lexsort((np.arange(snap.n), -lcc_ref))[: q.k]
+                assert np.array_equal(r.ids, order), (q, r.ids, order)
+            n_verified += 1
+
     t_start = time.perf_counter()
-    for ev in read_write_stream(
-        lambda: svc.store.degrees,
-        n,
-        n_events=n_events,
-        write_frac=args.write_frac,
-        queries_per_event=args.queries_per_event,
-        updates_per_event=args.updates_per_event,
-        kind=args.workload,
-        seed=args.seed,
-    ):
-        if ev.is_update:
-            res = svc.apply_updates(ev.update)
-            n_updates += res.n_inserted + res.n_deleted
-            continue
-        if args.max_wait_ms is None:
-            results = svc.scheduler.run(ev.queries)
-        else:
-            # deadline-aware serving: submit one at a time and poll —
-            # full windows dispatch immediately, the trailing partial
-            # window sits until its oldest query ages past the deadline
-            results = []
-            for q in ev.queries:
-                svc.scheduler.submit(q)
-                results.extend(svc.scheduler.poll())
-            while svc.scheduler.pending:
-                time.sleep(args.max_wait_ms * 1e-3 / 8)
-                results.extend(svc.scheduler.poll())
-        served += len(results)
+    if args.open_loop:
+        # -------- open-loop: arrivals never wait for completions ------
+        from ..serving import make_queries
+        from ..traffic import assign_tenants, make_arrivals, run_open_loop
+
+        queries = make_queries(
+            svc.store.degrees, args.queries, kind=args.workload,
+            seed=args.seed,
+        )
+        if quotas is not None:
+            queries = assign_tenants(
+                queries, quotas.tenants,
+                rng=np.random.default_rng(tenant_seed),
+            )
+        arrivals = make_arrivals(
+            args.open_loop, len(queries), args.rate, seed=arrival_seed
+        )
+        if args.arrivals_out:
+            arrivals.save(args.arrivals_out)
+            print(f"arrival trace: {len(arrivals)} arrivals "
+                  f"({arrivals.measured_qps:,.0f} q/s measured) -> "
+                  f"{args.arrivals_out}")
+        open_report = run_open_loop(
+            svc.scheduler, queries, arrivals, clock=clock
+        )
+        served = open_report.n_served
         if args.verify:
-            snap = svc.store.to_csr()
-            t_ref = triangles_per_vertex(snap)
-            lcc_ref = lcc_scores(snap, t_ref)
-            for r in results:
-                q = r.query
-                if q.kind == QueryKind.TRIANGLES:
-                    assert r.value == t_ref[q.u], (q, r.value, t_ref[q.u])
-                elif q.kind == QueryKind.LCC:
-                    assert r.value == lcc_ref[q.u], (q, r.value, lcc_ref[q.u])
-                elif q.kind == QueryKind.COMMON_NEIGHBORS:
-                    want = np.intersect1d(snap.row(q.u), snap.row(q.v))
-                    assert r.value == want.size and np.array_equal(r.ids, want)
-                else:  # TOP_K_LCC: compare ranking vs the recount
-                    order = np.lexsort((np.arange(snap.n), -lcc_ref))[: q.k]
-                    assert np.array_equal(r.ids, order), (q, r.ids, order)
-                n_verified += 1
-        if served >= args.queries:
-            break
+            _verify_results(open_report.results)
+    else:
+        # -------- closed-loop read-write stream -----------------------
+        # 2x safety factor: event kinds are drawn i.i.d., so an unlucky
+        # write-heavy prefix must not end the stream before --queries
+        # served.
+        n_query_events = -(-args.queries // args.queries_per_event)
+        n_events = int(2 * n_query_events / (1.0 - args.write_frac)) + 1
+        for ev in read_write_stream(
+            lambda: svc.store.degrees,
+            n,
+            n_events=n_events,
+            write_frac=args.write_frac,
+            queries_per_event=args.queries_per_event,
+            updates_per_event=args.updates_per_event,
+            kind=args.workload,
+            seed=args.seed,
+        ):
+            if ev.is_update:
+                res = svc.apply_updates(ev.update)
+                n_updates += res.n_inserted + res.n_deleted
+                continue
+            if args.max_wait_ms is None:
+                results = svc.scheduler.run(ev.queries)
+            else:
+                # deadline-aware serving: submit one at a time and poll
+                # — full windows dispatch immediately, the trailing
+                # partial window sits until its oldest query ages past
+                # the deadline
+                results = []
+                for q in ev.queries:
+                    svc.scheduler.submit(q)
+                    results.extend(svc.scheduler.poll())
+                while svc.scheduler.pending:
+                    time.sleep(args.max_wait_ms * 1e-3 / 8)
+                    results.extend(svc.scheduler.poll())
+            served += len(results)
+            if args.verify:
+                _verify_results(results)
+            if served >= args.queries:
+                break
     wall = time.perf_counter() - t_start
-    if served < args.queries:
+    if served < args.queries and not args.open_loop:
         print(f"note: stream exhausted at {served}/{args.queries} queries")
 
     lat = svc.scheduler.latency_summary()
+    if open_report is not None:
+        print(f"open-loop[{open_report.process}]: offered "
+              f"{open_report.offered_qps:,.0f} q/s -> achieved "
+              f"{open_report.achieved_qps:,.0f} q/s, "
+              f"{open_report.n_arrivals} arrivals / "
+              f"{open_report.n_admitted} admitted / "
+              f"{open_report.n_served} served over "
+              f"{open_report.duration_s:.2f}s virtual")
+    if args.slo:
+        sch = svc.scheduler
+        print(f"slo: hit rate {lat.slo_hit_rate:.1%} "
+              f"({lat.slo_violations} violations), "
+              f"{sch.n_slo_flushes} slo flushes, "
+              f"{sch.n_shed_slo} shed past deadline")
+        for cls in sorted(lat.shed_rate_by_class):
+            print(f"  {cls}: shed rate "
+                  f"{lat.shed_rate_by_class[cls]:.1%} "
+                  f"({lat.shed_by_class.get(cls, 0)} shed)")
+    if quotas is not None:
+        qc = quotas.counters()
+        adm, rej = sum(qc["admitted"].values()), sum(qc["rejected"].values())
+        print(f"tenants[{args.tenants}]: {adm} admitted / {rej} "
+              f"quota-shed ({svc.scheduler.n_shed_quota} at the door)")
+        if svc.runtime.caches is not None:
+            tb = {}
+            for c in svc.runtime.caches:
+                for t, b in c.tenant_bytes().items():
+                    tb[t] = tb.get(t, 0) + b
+            total = sum(c.used_bytes for c in svc.runtime.caches)
+            shares = " ".join(
+                f"{t or '_'}={b}B" for t, b in sorted(tb.items())
+            )
+            print(f"  cache shares: {shares} (sum {sum(tb.values())} "
+                  f"== used {total})")
+            assert sum(tb.values()) == total, \
+                "per-tenant cache accounting does not sum to used bytes"
+    if scorer is not None:
+        print(f"ewma scores: blend {args.ewma_blend} decay "
+              f"{args.ewma_decay}, {len(scorer._freq)} vertices tracked")
     rt = svc.runtime
     st = rt.aggregate_stats() if cross_rank else svc.provider.stats
     print(f"served {served} queries in {wall:.2f}s wall "

@@ -48,6 +48,7 @@ __all__ = [
     "record_residency_stats",
     "record_collective_ledger",
     "record_latency",
+    "record_tenancy",
     "record_coherence_report",
     "record_runtime",
     "record_reconciliation",
@@ -206,6 +207,12 @@ def record_provider_stats(reg: MetricRegistry, stats, *,
     # however it was resolved (locally, device tier, host cache, or wire).
     reg.counter("row_requests", stats.local_reads + stats.remote_reads,
                 rank=rank, tier="host", phase="fetch_rows")
+    # per-tenant transport attribution (dict fields are skipped by the
+    # generic dataclass walk above, so flatten them here).
+    for t, n in getattr(stats, "tenant_requests", {}).items():
+        reg.counter(f"tenant_requests:{t}", n, rank=rank, tier="host")
+    for t, b in getattr(stats, "tenant_bytes_fetched", {}).items():
+        reg.counter(f"tenant_bytes_fetched:{t}", b, rank=rank, tier="host")
 
 
 def record_cache_stats(reg: MetricRegistry, stats, *, rank: int = -1,
@@ -272,6 +279,38 @@ def record_latency(reg: MetricRegistry, recorder, *, rank: int = -1) -> None:
         reg.counter(f"shed_{reason}", n, rank=rank, tier="serving")
     for cls, lats in getattr(recorder, "by_class", lambda: {})().items():
         reg.observe(f"latency_s:{cls}", lats, rank=rank, tier="serving")
+    # SLO attainment (only recorders that saw deadline-stamped queries
+    # carry violations; pre-SLO recorders default to zero).
+    reg.counter("slo_violations", getattr(recorder, "slo_violations", 0),
+                rank=rank, tier="serving")
+    summ = recorder.summary()
+    reg.gauge("slo_hit_rate", summ.slo_hit_rate, rank=rank, tier="serving")
+
+
+def record_tenancy(reg: MetricRegistry, quotas, runtime=None, *,
+                   rank: int = -1) -> None:
+    """``TenantQuotas`` (+ optionally the runtime's per-rank caches) →
+    ``serving``/``host_cache`` tenancy counters and gauges: global
+    admission outcomes, per-tenant token-bucket levels, and — when a
+    cached runtime is passed — per-tenant resident cache bytes, whose
+    sum equals each cache's ``used_bytes`` (the accounting invariant
+    the traffic bench asserts)."""
+    for outcome, per_tenant in quotas.counters().items():
+        reg.counter(f"quota_{outcome}", sum(per_tenant.values()),
+                    rank=rank, tier="serving")
+        for t, n in per_tenant.items():
+            reg.counter(f"quota_{outcome}:{t}", n, rank=rank,
+                        tier="serving")
+    for t, lvl in quotas.bucket_levels().items():
+        reg.gauge(f"quota_tokens:{t}", lvl, rank=rank, tier="serving")
+    for t, share in quotas.cache_shares().items():
+        reg.gauge(f"cache_share:{t}", share, rank=rank, tier="host_cache")
+    caches = getattr(runtime, "caches", None) if runtime is not None else None
+    if caches is not None:
+        for r, c in enumerate(caches):
+            for t, b in sorted(c.tenant_bytes().items()):
+                reg.counter(f"tenant_cache_bytes:{t or '_untagged'}", b,
+                            rank=r, tier="host_cache")
 
 
 def record_coherence_report(reg: MetricRegistry, report) -> None:

@@ -15,11 +15,17 @@ Turns the batch-epoch reproduction into a request-driven service:
                   routing each query to its owner rank
 - ``scheduler`` — ``MicrobatchScheduler``: request coalescing with FIFO
                   + deadline (``max_wait``) + priority (urgent) drains,
-                  p50/p99 latency accounting
-- ``workload``  — uniform / Zipf(hub-skewed) / read-write generators
+                  per-class SLO deadlines with EDF window selection,
+                  tenant-quota admission, p50/p99 latency accounting
+- ``closed_loop`` — uniform / Zipf(hub-skewed) / read-write generators
+                  (closed-loop: next request waits for the previous
+                  response; ``workload`` is its historical alias). The
+                  open-loop arrival side lives in ``repro.traffic``.
 - ``service``   — ``LiveQueryService``: queries + streaming updates over
                   one shared store/runtime with a verified staleness
-                  bound (single-rank or cross-rank)
+                  bound (single-rank or cross-rank), plus the traffic
+                  plane hooks (SLO policy, tenant quotas, workload
+                  scorer, injectable clock)
 """
 from .requests import Query, QueryKind, QueryResult  # noqa: F401
 from .provider import (  # noqa: F401
@@ -32,7 +38,7 @@ from .provider import (  # noqa: F401
 from .engine import QueryEngine, ShardedQueryEngine  # noqa: F401
 from .scheduler import MicrobatchScheduler  # noqa: F401
 from .metrics import LatencyRecorder, LatencySummary  # noqa: F401
-from .workload import (  # noqa: F401
+from .closed_loop import (  # noqa: F401
     ReadWriteEvent,
     make_queries,
     read_write_stream,

@@ -224,25 +224,50 @@ class QueryEngine:
         rows stay on device and the pair intersection gathers them from
         the residency buffer — the host-row-materialization saving the
         tier exists for. (Endpoints are always fetched: the engine
-        needs their rows to enumerate pairs and for degrees/ids.)"""
+        needs their rows to enumerate pairs and for degrees/ids.)
+
+        Tenant-tagged queries build a vertex -> tenant map with
+        first-requester semantics (a row two tenants' queries share is
+        charged to whichever query claims it first, matching the
+        cache's first-fetcher entry tag); neighbor fetches inherit the
+        tenant of the query whose row surfaced them."""
         endpoints = [q.u for q in tri]
         for q in cn:
             endpoints.extend((q.u, q.v))
+        tenants: Optional[Dict[int, str]] = None
+        if any(q.tenant for q in tri) or any(q.tenant for q in cn):
+            tenants = {}
+            for q in tri:
+                tenants.setdefault(int(q.u), q.tenant)
+            for q in cn:
+                tenants.setdefault(int(q.u), q.tenant)
+                tenants.setdefault(int(q.v), q.tenant)
         ep = np.array(endpoints, np.int64)
         # dedup preserving order of first use (what the cache replay sees)
         _, first = np.unique(ep, return_index=True)
         need = ep[np.sort(first)]
-        rows = self.provider.fetch_rows(need, record=record)
+        rows = self.provider.fetch_rows(need, record=record,
+                                        tenants=tenants)
         if tri:
-            nbrs = np.unique(
-                np.concatenate([rows[q.u] for q in tri]).astype(np.int64)
-            )
+            cat = np.concatenate(
+                [rows[q.u] for q in tri]
+            ).astype(np.int64)
+            nbrs, first_nbr = np.unique(cat, return_index=True)
+            if tenants is not None and cat.size:
+                qidx = np.concatenate(
+                    [np.full(rows[q.u].size, i, np.int64)
+                     for i, q in enumerate(tri)]
+                )
+                owner_q = qidx[first_nbr]
+                for v, qi in zip(nbrs.tolist(), owner_q.tolist()):
+                    tenants.setdefault(int(v), tri[qi].tenant)
             need2 = nbrs[~np.isin(nbrs, need, assume_unique=False)]
             dev = self.residency
             if dev is not None and need2.size:
                 need2 = need2[dev.slot_of(need2) < 0]
             if need2.size:
-                rows.update(self.provider.fetch_rows(need2, record=record))
+                rows.update(self.provider.fetch_rows(need2, record=record,
+                                                     tenants=tenants))
         return rows
 
     def _pair_counts(

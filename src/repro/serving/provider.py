@@ -90,11 +90,14 @@ class RuntimeRowProvider:
         self,
         vertices: Sequence[int],
         record: Optional[List[FetchEvent]] = None,
+        tenants: Optional[Dict[int, str]] = None,
     ) -> Dict[int, np.ndarray]:
         """Sorted adjacency row per distinct vertex (callers dedup).
         ``record`` collects per-vertex ``FetchEvent`` resolutions for
-        the SPMD executor's placement plan."""
-        return self.runtime.fetch_rows(self.rank, vertices, record=record)
+        the SPMD executor's placement plan; ``tenants`` maps vertex ->
+        tenant tag for per-tenant accounting + quota-aware caching."""
+        return self.runtime.fetch_rows(self.rank, vertices, record=record,
+                                       tenants=tenants)
 
     # ---------------- coherence ----------------
     def notify_batch(self, changed_ids: Iterable[int]) -> None:

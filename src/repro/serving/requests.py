@@ -36,6 +36,11 @@ class Query:
     u: int = -1
     v: int = -1
     k: int = 0
+    # multi-tenant serving: admission (token buckets) and cache-share
+    # accounting key on this tag; "" = untagged (single-tenant path,
+    # never rate-limited). Tag with dataclasses.replace or
+    # traffic.assign_tenants.
+    tenant: str = ""
 
     @staticmethod
     def lcc(v: int) -> "Query":

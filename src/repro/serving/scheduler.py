@@ -20,29 +20,46 @@ Two drain policies coexist:
   dispatches when it is *full* (``max_batch``), when the **oldest
   pending query has waited ``max_wait`` seconds** (the latency deadline
   — without it a trickle of requests would wait forever for a full
-  window), or when an **urgent** query is pending (priority flush:
-  ``submit(q, urgent=True)`` dispatches the current window immediately,
-  batching whatever happens to be queued in front of it). Otherwise
-  ``poll`` returns nothing and requests keep coalescing.
+  window), when an **SLO deadline is imminent** (an ``SLOPolicy``
+  stamps each query ``t_submit + budget(class)``; the window goes out
+  ``headroom_s`` before the most urgent one), or when an **urgent**
+  query is pending (priority flush: ``submit(q, urgent=True)``).
+  Otherwise ``poll`` returns nothing and requests keep coalescing.
+
+**EDF window selection** — with an SLO policy attached, each window
+takes the ``max_batch`` pending queries with the *earliest deadlines*
+(stable on submit time), not the oldest submissions: a late-arriving
+tight-deadline query jumps a queue of loose-deadline ones. Without a
+policy, FIFO order is unchanged.
 
 **Admission control / load shedding** — an overloaded open-loop service
 must reject work it cannot serve in time, or every queued query's
 latency collapses together:
 
+- ``quotas`` (a ``TenantQuotas``) rate-limits per tenant at submit:
+  an empty token bucket sheds with reason ``"quota"`` before the query
+  can occupy queue depth;
 - ``max_queue`` bounds the pending depth: a submit past it is rejected
   immediately (``submit`` returns False, reason ``"depth"``);
 - ``shed_wait`` bounds staleness at dispatch: ``poll()`` drops pending
-  queries that have already waited past it (reason ``"deadline"``)
-  instead of serving answers nobody is waiting for anymore.
+  queries that have already waited past it (reason ``"deadline"``);
+- with an SLO policy, a query whose *class* deadline has strictly
+  passed is shed with reason ``"slo"`` — under overload, tight-budget
+  classes shed first, which is the policy expressing itself.
 
-Both feed the ``shed``/``shed_rate`` counters in the latency summary.
+All four feed the ``shed``/``shed_rate`` counters (and per-class
+``shed_by_class``) in the latency summary.
 
 ``max_batch=1`` degenerates to one-query-at-a-time serving — the
 baseline the serving benchmark compares against. The clock is
-injectable so deadline behavior is testable without sleeping.
+injectable so deadline behavior is testable without sleeping, and
+``submit(q, at=...)`` lets an open-loop generator stamp the query with
+its schedule arrival time even when the submit call itself runs late
+(backlogged server) — that difference IS the queueing delay.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Callable, List, Optional, Sequence
 
@@ -59,6 +76,16 @@ def _slo_class(q: Query) -> str:
     return q.kind.name.lower()
 
 
+@dataclasses.dataclass
+class _Pending:
+    """One queued query with its admission-time metadata."""
+
+    query: Query
+    t_submit: float
+    urgent: bool = False
+    deadline: Optional[float] = None  # absolute SLO deadline (None: no SLO)
+
+
 class MicrobatchScheduler:
     def __init__(
         self,
@@ -69,6 +96,8 @@ class MicrobatchScheduler:
         max_queue: Optional[int] = None,
         shed_wait: Optional[float] = None,
         clock: Optional[Callable[[], float]] = None,
+        slo=None,  # Optional[traffic.SLOPolicy]
+        quotas=None,  # Optional[traffic.TenantQuotas]
     ):
         assert max_batch >= 1
         assert max_wait is None or max_wait >= 0.0
@@ -87,45 +116,58 @@ class MicrobatchScheduler:
         self.max_wait = max_wait
         self.max_queue = None if max_queue is None else int(max_queue)
         self.shed_wait = shed_wait
+        self.slo = slo
+        self.quotas = quotas
         self._clock = clock or time.perf_counter
-        self._pending: List[tuple] = []  # (query, t_submit, urgent)
+        self._pending: List[_Pending] = []
         self._n_urgent = 0
         self.recorder = LatencyRecorder()
         self.n_batches = 0
         self.n_deadline_flushes = 0
         self.n_priority_flushes = 0
+        self.n_slo_flushes = 0
         self.n_shed_depth = 0
         self.n_shed_deadline = 0
+        self.n_shed_slo = 0
+        self.n_shed_quota = 0
 
     # ---------------- request path ----------------
-    def submit(self, query: Query, *, urgent: bool = False) -> bool:
-        """Queue one query. Returns False (and records a shed with
-        reason ``"depth"``) when the bounded queue is full — the
-        caller's signal to back off or retry elsewhere."""
+    def _admit(self, query: Query, t: float, urgent: bool) -> bool:
+        """Shared admission path: quota, then depth, then enqueue."""
+        cls = _slo_class(query)
+        if self.quotas is not None and query.tenant:
+            if not self.quotas.admit(query.tenant, t):
+                self.n_shed_quota += 1
+                self.recorder.record_shed("quota", cls=cls)
+                return False
         if self.max_queue is not None and len(self._pending) >= self.max_queue:
             self.n_shed_depth += 1
-            self.recorder.record_shed("depth", cls=_slo_class(query))
+            self.recorder.record_shed("depth", cls=cls)
             return False
-        self._pending.append((query, self._clock(), bool(urgent)))
+        deadline = self.slo.deadline(cls, t) if self.slo is not None else None
+        self._pending.append(_Pending(query, t, bool(urgent), deadline))
         if urgent:
             self._n_urgent += 1
         return True
 
+    def submit(self, query: Query, *, urgent: bool = False,
+               at: Optional[float] = None) -> bool:
+        """Queue one query. Returns False (and records a shed with the
+        rejecting reason: ``"quota"`` for an exhausted tenant bucket,
+        ``"depth"`` for a full queue) when admission fails — the
+        caller's signal to back off or retry elsewhere.
+
+        ``at`` stamps the query's *arrival* time (open-loop generators
+        replaying a schedule); default is the clock's now.
+        """
+        t = self._clock() if at is None else float(at)
+        return self._admit(query, t, urgent)
+
     def submit_many(self, queries: Sequence[Query]) -> int:
-        """Queue many; returns how many were admitted (the rest shed)."""
+        """Queue many at one timestamp; returns how many were admitted
+        (the rest shed, by reason)."""
         t = self._clock()
-        admitted = 0
-        for q in queries:
-            if (
-                self.max_queue is not None
-                and len(self._pending) >= self.max_queue
-            ):
-                self.n_shed_depth += 1
-                self.recorder.record_shed("depth", cls=_slo_class(q))
-                continue
-            self._pending.append((q, t, False))
-            admitted += 1
-        return admitted
+        return sum(1 for q in queries if self._admit(q, t, False))
 
     @property
     def pending(self) -> int:
@@ -140,32 +182,78 @@ class MicrobatchScheduler:
             return "full"
         if self._n_urgent:
             return "urgent"
-        if self.max_wait is not None and now - self._pending[0][1] >= self.max_wait:
+        if self.slo is not None:
+            dmin = min(p.deadline for p in self._pending)
+            if now >= dmin - self.slo.headroom_s:
+                return "slo"
+        if self.max_wait is not None and (
+            now - self._pending[0].t_submit >= self.max_wait
+        ):
             return "deadline"
         return None
 
+    def next_due_at(self) -> Optional[float]:
+        """Earliest future time at which the queue becomes due, or None
+        when no time-based trigger exists (queue empty, or neither
+        ``max_wait`` nor an SLO policy is set). Open-loop drains advance
+        a virtual clock to this point instead of busy-waiting."""
+        if not self._pending:
+            return None
+        if len(self._pending) >= self.max_batch or self._n_urgent:
+            return self._clock()
+        cands = []
+        if self.slo is not None:
+            cands.append(min(p.deadline for p in self._pending)
+                         - self.slo.headroom_s)
+        if self.max_wait is not None:
+            cands.append(self._pending[0].t_submit + self.max_wait)
+        return min(cands) if cands else None
+
+    def _peek_window(self) -> List[_Pending]:
+        """Select (without removing) the next window. FIFO without an
+        SLO policy; EDF (earliest absolute deadline, stable on submit
+        order) with one — a full queue serves the most urgent work
+        first. Selection previews so an engine error leaves the window
+        queued (visible, retryable), not silently dropped; ``_remove``
+        commits after success."""
+        if self.slo is None or len(self._pending) <= 1:
+            return self._pending[: self.max_batch]
+        order = sorted(range(len(self._pending)),
+                       key=lambda i: (self._pending[i].deadline, i))
+        return [self._pending[i] for i in sorted(order[: self.max_batch])]
+
+    def _record_results(self, chunk: List[_Pending], results, t0, t1):
+        self.recorder.record_wall(t1 - t0)
+        self.n_batches += 1
+        for p, r in zip(chunk, results):
+            r.latency_s = t1 - p.t_submit
+            self.recorder.record(
+                r.latency_s, cls=_slo_class(p.query),
+                deadline_s=(None if p.deadline is None
+                            else p.deadline - p.t_submit),
+            )
+        obs_trace.counter("queue_depth", len(self._pending))
+
     def _drain_window(self) -> List[QueryResult]:
-        chunk = self._pending[: self.max_batch]
+        chunk = self._peek_window()
         t0 = self._clock()
         with obs_trace.span("scheduler_flush", cat="serving",
                             n=len(chunk)):
-            results = self.engine.execute_batch([q for q, _, _ in chunk])
+            results = self.engine.execute_batch([p.query for p in chunk])
         t1 = self._clock()
-        # dequeue only after success: an engine error must leave the
-        # chunk queued (visible, retryable), not silently dropped
-        del self._pending[: self.max_batch]
-        self._n_urgent -= sum(1 for _, _, u in chunk if u)
-        self.recorder.record_wall(t1 - t0)
-        self.n_batches += 1
-        for (q, t_sub, _), r in zip(chunk, results):
-            r.latency_s = t1 - t_sub
-            self.recorder.record(r.latency_s, cls=_slo_class(q))
-        obs_trace.counter("queue_depth", len(self._pending))
+        self._remove(chunk)
+        self._record_results(chunk, results, t0, t1)
         return results
+
+    def _remove(self, chunk: List[_Pending]) -> None:
+        taken = set(map(id, chunk))
+        self._pending = [p for p in self._pending if id(p) not in taken]
+        self._n_urgent -= sum(1 for p in chunk if p.urgent)
 
     def flush(self) -> List[QueryResult]:
         """Drain the queue in ``max_batch`` windows; returns all results
-        in submission order. When the engine is a pipelined SPMD engine
+        in dispatch order (submission order without an SLO policy, EDF
+        order with one). When the engine is a pipelined SPMD engine
         (``engine.pipeline``), the host pack + collective launch of
         window k+1 overlaps window k's in-flight device intersect —
         ``end_batch`` is the only device sync (the trace's
@@ -184,28 +272,22 @@ class MicrobatchScheduler:
         The ``scheduler_flush`` span covers only the host-side begin —
         keeping spans disjoint per lane (the wait is its own span), so
         the exported trace stays well-nested under overlap."""
-        chunk = self._pending[: self.max_batch]
+        chunk = self._peek_window()
         t0 = self._clock()
         with obs_trace.span("scheduler_flush", cat="serving",
                             n=len(chunk), pipelined=True):
-            inflight = self.engine.begin_batch([q for q, _, _ in chunk])
+            inflight = self.engine.begin_batch([p.query for p in chunk])
         # the control plane (cache admission, serve matrix, the
         # measured-vs-modeled reconciliation) completed inside
         # begin_batch — the chunk is committed; only device counts
         # remain outstanding. A begin error leaves the chunk queued.
-        del self._pending[: self.max_batch]
-        self._n_urgent -= sum(1 for _, _, u in chunk if u)
+        self._remove(chunk)
         return chunk, inflight, t0
 
     def _finish_window(self, chunk, inflight, t0) -> List[QueryResult]:
         results = self.engine.end_batch(inflight)
         t1 = self._clock()
-        self.recorder.record_wall(t1 - t0)
-        self.n_batches += 1
-        for (q, t_sub, _), r in zip(chunk, results):
-            r.latency_s = t1 - t_sub
-            self.recorder.record(r.latency_s, cls=_slo_class(q))
-        obs_trace.counter("queue_depth", len(self._pending))
+        self._record_results(chunk, results, t0, t1)
         return results
 
     def _flush_pipelined(self) -> List[QueryResult]:
@@ -222,27 +304,35 @@ class MicrobatchScheduler:
         return out
 
     def _shed_stale(self, now: float) -> None:
-        """Drop pending queries that already waited past ``shed_wait``
-        — serving them would return answers nobody is waiting for,
-        while holding up the queries behind them."""
-        if self.shed_wait is None or not self._pending:
+        """Drop pending queries that can no longer be served usefully:
+        past ``shed_wait`` (reason ``"deadline"``) or, with an SLO
+        policy, strictly past their class deadline (reason ``"slo"`` —
+        strict, so a query AT its deadline still rides the flush that
+        the ``"slo"`` due-reason triggers for it)."""
+        if (self.shed_wait is None and self.slo is None) or not self._pending:
             return
-        keep: List[tuple] = []
-        for item in self._pending:
-            if now - item[1] >= self.shed_wait:
+        keep: List[_Pending] = []
+        for p in self._pending:
+            if self.shed_wait is not None and now - p.t_submit >= self.shed_wait:
+                reason = "deadline"
                 self.n_shed_deadline += 1
-                self.recorder.record_shed("deadline", cls=_slo_class(item[0]))
-                if item[2]:
-                    self._n_urgent -= 1
+            elif p.deadline is not None and now > p.deadline:
+                reason = "slo"
+                self.n_shed_slo += 1
             else:
-                keep.append(item)
+                keep.append(p)
+                continue
+            self.recorder.record_shed(reason, cls=_slo_class(p.query))
+            if p.urgent:
+                self._n_urgent -= 1
         if len(keep) != len(self._pending):
             self._pending = keep
 
     def poll(self) -> List[QueryResult]:
         """Deadline-aware drain with load shedding: dispatch windows
-        only while one is due (full / urgent pending / oldest past
-        ``max_wait``); queries already stale past ``shed_wait`` are
+        only while one is due (full / urgent pending / an SLO deadline
+        within headroom / oldest past ``max_wait``); queries already
+        stale past ``shed_wait`` or their class deadline are
         rejected-with-reason instead of served; otherwise return
         nothing and let requests keep coalescing."""
         out: List[QueryResult] = []
@@ -256,6 +346,8 @@ class MicrobatchScheduler:
                 self.n_deadline_flushes += 1
             elif reason == "urgent":
                 self.n_priority_flushes += 1
+            elif reason == "slo":
+                self.n_slo_flushes += 1
             out.extend(self._drain_window())
 
     def run(self, queries: Sequence[Query]) -> List[QueryResult]:

@@ -66,6 +66,10 @@ class LiveQueryService:
         pipeline: bool = False,
         device_scope: str = "replicated",
         stream_kw: Optional[dict] = None,
+        slo=None,  # Optional[traffic.SLOPolicy]
+        quotas=None,  # Optional[traffic.TenantQuotas]
+        scorer=None,  # Optional[traffic.WorkloadScorer]
+        clock=None,  # injectable time source (traffic clocks)
     ):
         assert execution == "loop" or cross_rank, (
             "SPMD execution runs the p cross-rank views on devices — "
@@ -149,12 +153,31 @@ class LiveQueryService:
         if getattr(hook, "runtime", None) is not self.runtime:
             hook.attach_provider(self.runtime)
         self.coherence = coherence
+        # ---------------- traffic plane ----------------
+        # live workload scoring: admissions through every rank cache use
+        # the EWMA×degree blend, and the device tier re-ranks from the
+        # same scorer on refresh_scores().
+        self.scorer = scorer
+        if scorer is not None:
+            self.runtime.attach_scorer(scorer)
+        # tenant cache shares: hard byte caps inside each rank's cache.
+        # NOTE: shares steer eviction with state the access trace does
+        # not record, so don't combine with --cache-trace replay gates.
+        self.quotas = quotas
+        if quotas is not None and self.runtime.caches is not None:
+            shares = quotas.cache_shares()
+            if shares:
+                for c in self.runtime.caches:
+                    c.set_tenant_shares(shares)
         self.scheduler = MicrobatchScheduler(
             self.engine,
             max_batch=max_batch,
             max_wait=max_wait,
             max_queue=max_queue,
             shed_wait=shed_wait,
+            clock=clock,
+            slo=slo,
+            quotas=quotas,
         )
 
     # ---------------- write path ----------------
@@ -166,10 +189,22 @@ class LiveQueryService:
                             n=batch.u.size):
             return self.stream.apply_batch(batch)
 
+    def refresh_scores(self) -> int:
+        """Re-rank the device-resident tier under the live workload
+        scores (between windows — rebuilds bump slot epochs). No-op
+        without a scorer/tier; returns rebuilds performed."""
+        assert self.scheduler.pending == 0, (
+            "drain queries before re-ranking residency (epoch bumps "
+            "would fault in-flight handles)"
+        )
+        return self.runtime.refresh_device_scores()
+
     # ---------------- read path ----------------
-    def submit(self, query: Query, *, urgent: bool = False) -> bool:
-        """False when admission control shed the query (queue full)."""
-        return self.scheduler.submit(query, urgent=urgent)
+    def submit(self, query: Query, *, urgent: bool = False,
+               at: Optional[float] = None) -> bool:
+        """False when admission control shed the query (tenant quota or
+        queue depth). ``at`` stamps the arrival time (open-loop)."""
+        return self.scheduler.submit(query, urgent=urgent, at=at)
 
     def submit_many(self, queries: Sequence[Query]) -> int:
         """Number of queries admitted (the rest were shed)."""
@@ -198,11 +233,14 @@ class LiveQueryService:
             record_latency,
             record_reconciliation,
             record_runtime,
+            record_tenancy,
         )
 
         reg = MetricRegistry()
         record_runtime(reg, self.runtime)
         record_latency(reg, self.scheduler.recorder)
+        if self.quotas is not None:
+            record_tenancy(reg, self.quotas, self.runtime)
         spmd = getattr(self.engine, "spmd", None)
         if spmd is not None:
             record_collective_ledger(reg, spmd.ledger)

@@ -198,13 +198,20 @@ def test_merge_mixed_zero_and_nonzero_counters():
 
 def test_merge_counter_dataclasses_covers_every_provider_field():
     a = ProviderStats(local_reads=1, remote_reads=2, cache_hits=1,
-                      cache_misses=1, bytes_fetched=100, modeled_comm_s=0.1)
-    b = ProviderStats(local_reads=4, device_hits=3, bytes_fetched=50)
+                      cache_misses=1, bytes_fetched=100, modeled_comm_s=0.1,
+                      tenant_requests={"t0": 3}, tenant_bytes_fetched={"t0": 64})
+    b = ProviderStats(local_reads=4, device_hits=3, bytes_fetched=50,
+                      tenant_requests={"t0": 1, "t1": 2})
     merged = merge_counter_dataclasses(ProviderStats, [a, b])
     for f in dataclasses.fields(ProviderStats):
-        assert getattr(merged, f.name) == (
-            getattr(a, f.name) + getattr(b, f.name)
-        ), f.name
+        va, vb, vm = (getattr(x, f.name) for x in (a, b, merged))
+        if isinstance(va, dict):
+            expect = dict(va)
+            for k, v in vb.items():
+                expect[k] = expect.get(k, 0) + v
+            assert vm == expect, f.name
+        else:
+            assert vm == va + vb, f.name
 
 
 def test_aggregate_stats_equals_per_rank_sums_p4():
@@ -213,8 +220,15 @@ def test_aggregate_stats_equals_per_rank_sums_p4():
         rt.fetch_rows(rank, range(store.n))
     agg = rt.aggregate_stats()
     for f in dataclasses.fields(ProviderStats):
-        want = sum(getattr(s, f.name) for s in rt.stats)
-        assert getattr(agg, f.name) == pytest.approx(want), f.name
+        vals = [getattr(s, f.name) for s in rt.stats]
+        if isinstance(vals[0], dict):
+            want = {}
+            for d in vals:
+                for k, v in d.items():
+                    want[k] = want.get(k, 0) + v
+            assert getattr(agg, f.name) == want, f.name
+        else:
+            assert getattr(agg, f.name) == pytest.approx(sum(vals)), f.name
     cagg = rt.merged_cache_stats()
     for f in dataclasses.fields(CacheStats):
         want = sum(getattr(c.stats, f.name) for c in rt.caches)

@@ -1,0 +1,380 @@
+"""Traffic plane: arrivals, SLO scheduling, tenancy, live cache scores.
+
+Covers the ISSUE's edge cases explicitly: an all-expired window (every
+pending query past its class deadline at poll time), a mixed-class
+urgent flush (EDF selection under a priority trigger), and a
+quota-exhausted tenant (token bucket empty at the admission door) —
+all under an injectable ``VirtualClock`` so no test sleeps.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from conftest import powerlaw_graph
+from repro.core.cache import ClampiCache
+from repro.serving import (
+    LiveQueryService,
+    MicrobatchScheduler,
+    Query,
+    QueryEngine,
+    make_queries,
+)
+from repro.streaming import DynamicCSR
+from repro.traffic import (
+    ArrivalTrace,
+    HybridClock,
+    SLOPolicy,
+    TenantQuotas,
+    TenantSpec,
+    TokenBucket,
+    VirtualClock,
+    WorkloadScorer,
+    assign_tenants,
+    burst_arrivals,
+    diurnal_arrivals,
+    make_arrivals,
+    poisson_arrivals,
+    run_open_loop,
+)
+
+MIX = (0.5, 0.3, 0.2, 0.0)
+
+
+def _engine(n=40, seed=21):
+    csr = powerlaw_graph(n, 4, seed=seed)
+    store = DynamicCSR.from_csr(csr)
+    return QueryEngine(store, use_kernel=False)
+
+
+# ---------------------------------------------------------------------------
+# arrival processes + clocks
+# ---------------------------------------------------------------------------
+def test_poisson_arrivals_deterministic_and_calibrated():
+    a = poisson_arrivals(4000, 250.0, seed=3)
+    b = poisson_arrivals(4000, 250.0, seed=3)
+    assert np.array_equal(a.t, b.t)
+    assert np.all(np.diff(a.t) >= 0)
+    assert a.measured_qps == pytest.approx(250.0, rel=0.1)
+    assert poisson_arrivals(100, 250.0, seed=4).t[1] != a.t[1]
+
+
+def test_diurnal_and_burst_arrivals_sorted_and_reproducible():
+    for mk in (diurnal_arrivals, burst_arrivals):
+        a = mk(500, 100.0, seed=5)
+        assert np.all(np.diff(a.t) >= 0)
+        assert np.array_equal(a.t, mk(500, 100.0, seed=5).t)
+    # burst process actually bursts: max instantaneous rate over a
+    # window well above the offered average
+    a = burst_arrivals(2000, 100.0, seed=6)
+    gaps = np.diff(a.t)
+    assert np.percentile(gaps, 10) < 0.2 / 100.0  # in-burst gaps tight
+
+
+def test_arrival_trace_round_trip(tmp_path):
+    a = poisson_arrivals(64, 50.0, seed=7)
+    p = str(tmp_path / "arr.json")
+    a.save(p)
+    b = ArrivalTrace.load(p)
+    assert np.array_equal(a.t, b.t) and b.process == a.process
+    # trace: replays the file verbatim — n/rate are ignored
+    c = make_arrivals(f"trace:{p}", 32, 999.0)
+    assert np.array_equal(c.t, a.t)
+
+
+def test_arrival_trace_rejects_unsorted():
+    with pytest.raises(AssertionError):
+        ArrivalTrace(t=np.asarray([0.2, 0.1]), process="x",
+                     offered_qps=1.0)
+
+
+def test_virtual_clock_monotone_and_hybrid_floor():
+    c = VirtualClock()
+    c.advance(0.5)
+    c.advance_to(0.3)  # behind: no-op
+    assert c() == pytest.approx(0.5)
+    with pytest.raises(AssertionError):
+        c.advance(-0.1)
+    h = HybridClock(start=10.0)
+    t0 = h()
+    assert t0 >= 10.0
+    h.advance_to(t0 - 5.0)  # past: no-op
+    assert h() >= t0
+    h.advance_to(t0 + 100.0)
+    assert h() >= t0 + 100.0
+
+
+# ---------------------------------------------------------------------------
+# scheduler: SLO deadlines, EDF, shedding
+# ---------------------------------------------------------------------------
+def test_all_expired_window_sheds_everything():
+    clk = VirtualClock()
+    sched = MicrobatchScheduler(_engine(), max_batch=8, clock=clk,
+                                slo=SLOPolicy())
+    sched.submit(Query.lcc(1))                 # deadline 0.100
+    sched.submit(Query.common_neighbors(2, 3))  # deadline 0.050
+    clk.advance(5.0)  # everything long expired
+    assert sched.poll() == []
+    assert sched.pending == 0 and sched.n_shed_slo == 2
+    s = sched.latency_summary()
+    assert s.shed_by_class == {"common_neighbors": 1, "lcc": 1}
+    assert s.shed_rate_by_class["lcc"] == 1.0
+    assert s.slo_hit_rate == 0.0  # nothing served, everything shed
+
+
+def test_query_at_exact_deadline_rides_the_flush():
+    clk = VirtualClock()
+    sched = MicrobatchScheduler(_engine(), max_batch=8, clock=clk,
+                                slo=SLOPolicy())
+    sched.submit(Query.lcc(1), at=0.0)
+    clk.advance_to(sched.next_due_at())  # exactly deadline - headroom
+    res = sched.poll()
+    assert len(res) == 1 and sched.n_slo_flushes == 1
+    assert sched.n_shed_slo == 0  # shed is strictly past deadline
+
+
+def test_mixed_class_urgent_flush_uses_edf_selection():
+    clk = VirtualClock()
+    sched = MicrobatchScheduler(_engine(), max_batch=4, clock=clk,
+                                slo=SLOPolicy())
+    sched.submit(Query.lcc(1))                  # deadline 0.100
+    sched.submit(Query.lcc(2))                  # deadline 0.100
+    sched.submit(Query.common_neighbors(3, 4), urgent=True)  # 0.050
+    res = sched.poll()  # pending < max_batch: urgent is the trigger
+    # all three fit the window, executed in submit order
+    assert [r.query.u for r in res] == [1, 2, 3]
+    assert sched.n_priority_flushes == 1
+    assert sched.pending == 0
+    s = sched.latency_summary()
+    assert s.count == 3 and s.shed == 0
+    assert s.slo_hit_rate == 1.0  # virtual time: served instantly
+
+
+def test_edf_lets_tight_deadline_jump_fifo_queue():
+    clk = VirtualClock()
+    sched = MicrobatchScheduler(_engine(), max_batch=2, clock=clk,
+                                slo=SLOPolicy())
+    sched.submit(Query.lcc(1), at=0.0)
+    sched.submit(Query.lcc(2), at=0.0)
+    sched.submit(Query.lcc(3), at=0.0)
+    # late arrival, tighter class: deadline 0.051 beats every lcc's 0.100
+    sched.submit(Query.common_neighbors(5, 6), at=0.001)
+    clk.advance_to(0.051)
+    res = sched.poll()
+    assert [r.query.u for r in res[:2]] == [1, 5]  # cn jumped 2 and 3
+
+
+def test_quota_exhausted_tenant_sheds_at_the_door():
+    clk = VirtualClock()
+    quotas = TenantQuotas([TenantSpec("a", rate_qps=1.0, burst=2.0)])
+    sched = MicrobatchScheduler(_engine(), max_batch=64, clock=clk,
+                                quotas=quotas)
+    qa = dataclasses.replace(Query.lcc(1), tenant="a")
+    assert sched.submit(qa) and sched.submit(qa)
+    assert not sched.submit(qa)  # burst of 2 exhausted at t=0
+    assert sched.n_shed_quota == 1 and sched.pending == 2
+    # untagged traffic is never rate-limited
+    assert sched.submit(Query.lcc(2))
+    # bucket refills at 1 token/s under the virtual clock
+    clk.advance(1.0)
+    assert sched.submit(qa)
+    assert quotas.rejected["a"] == 1 and quotas.admitted["a"] == 3
+    assert sched.latency_summary().shed_by_class == {"lcc": 1}
+
+
+def test_slo_violation_counted_when_served_late():
+    clk = VirtualClock()
+    # shed disabled would be ideal; instead serve late via urgent flush
+    # after the deadline cannot happen (shed first). Use the recorder
+    # contract directly through a deadline-stamped late completion:
+    sched = MicrobatchScheduler(_engine(), max_batch=1, clock=clk,
+                                slo=SLOPolicy())
+    sched.submit(Query.lcc(1))  # max_batch=1: window full, dispatches
+    res = sched.poll()
+    assert len(res) == 1
+    s = sched.latency_summary()
+    # VirtualClock never advances during compute: served in 0s, no
+    # violation, perfect attainment
+    assert s.slo_violations == 0 and s.slo_hit_rate == 1.0
+    sched.recorder.record(1.0, cls="lcc", deadline_s=0.1)  # late serve
+    assert sched.latency_summary().slo_violations == 1
+
+
+def test_next_due_at_tracks_earliest_slo_deadline():
+    clk = VirtualClock()
+    sched = MicrobatchScheduler(_engine(), max_batch=8, clock=clk,
+                                slo=SLOPolicy(headroom_s=0.01),
+                                max_wait=1.0)
+    assert sched.next_due_at() is None
+    sched.submit(Query.lcc(1), at=0.0)
+    assert sched.next_due_at() == pytest.approx(0.09)  # 0.1 - headroom
+    sched.submit(Query.common_neighbors(2, 3), at=0.0)
+    assert sched.next_due_at() == pytest.approx(0.04)
+
+
+# ---------------------------------------------------------------------------
+# tenancy: token bucket + cache shares
+# ---------------------------------------------------------------------------
+def test_token_bucket_refills_lazily():
+    b = TokenBucket(rate=10.0, burst=4.0)
+    assert all(b.try_take(0.0) for _ in range(4))
+    assert not b.try_take(0.0)
+    assert b.try_take(0.25)  # 2.5 tokens refilled
+    assert b.level(0.25) == pytest.approx(1.5)
+    assert b.level(100.0) == pytest.approx(4.0)  # capped at burst
+
+
+def test_tenant_quotas_shares_normalized_and_uniform():
+    q = TenantQuotas.uniform(4)
+    assert sorted(q.tenants) == ["t0", "t1", "t2", "t3"]
+    assert sum(q.cache_shares().values()) == pytest.approx(1.0)
+    over = TenantQuotas([TenantSpec("a", cache_share=0.8),
+                         TenantSpec("b", cache_share=0.8)])
+    shares = over.cache_shares()
+    assert sum(shares.values()) == pytest.approx(1.0)
+    assert q.admit("unknown", 0.0)  # unknown tags pass, uncounted
+
+
+def test_assign_tenants_deterministic_and_weighted():
+    qs = [Query.lcc(i) for i in range(200)]
+    a = assign_tenants(qs, ["x", "y"], rng=np.random.default_rng(3))
+    b = assign_tenants(qs, ["x", "y"], rng=np.random.default_rng(3))
+    assert [q.tenant for q in a] == [q.tenant for q in b]
+    w = assign_tenants(qs, ["x", "y"], rng=np.random.default_rng(3),
+                       weights={"x": 9.0, "y": 1.0})
+    assert sum(q.tenant == "x" for q in w) > 150
+
+
+def test_cache_tenant_shares_cap_and_accounting():
+    c = ClampiCache(1000, 64)
+    c.set_tenant_shares({"a": 0.5, "b": 0.5})
+    for k in range(10):  # tenant a floods: 10 x 100B > 500B cap
+        c.get(k, 100, score=float(k), tenant="a")
+    tb = c.tenant_bytes()
+    assert tb.get("a", 0) <= 500
+    assert sum(tb.values()) == c.used_bytes
+    # b's reservation is still available
+    c.get(100, 100, score=0.5, tenant="b")
+    assert c.tenant_bytes()["b"] == 100
+    # a cannot evict b to grow: b's entry survives a's further flood
+    for k in range(10, 20):
+        c.get(k, 100, score=float(k), tenant="a")
+    assert c.tenant_bytes()["b"] == 100
+    assert sum(c.tenant_bytes().values()) == c.used_bytes
+
+
+def test_cache_hit_keeps_first_fetcher_tag():
+    c = ClampiCache(1000, 64)
+    c.set_tenant_shares({"a": 0.5, "b": 0.5})
+    c.get(1, 100, score=1.0, tenant="a")  # miss: a fetches, a owns
+    assert c.get(1, 100, score=1.0, tenant="b")  # hit: still a's byte
+    assert c.tenant_bytes() == {"a": 100}
+
+
+def test_cache_shares_validation():
+    c = ClampiCache(1000, 64)
+    with pytest.raises(AssertionError):
+        c.set_tenant_shares({"a": 0.7, "b": 0.7})
+    with pytest.raises(AssertionError):
+        c.set_tenant_shares({"a": 0.0})
+
+
+# ---------------------------------------------------------------------------
+# workload scorer
+# ---------------------------------------------------------------------------
+def test_scorer_matches_cachescope_formula():
+    sc = WorkloadScorer(blend=1.0, decay=0.5)
+    sc.observe(7)          # t=1: f = 1
+    sc.observe(9)          # t=2
+    sc.observe(7)          # t=3: f = 1 + 1 * 0.5**2 = 1.25
+    assert sc.freq(7) == pytest.approx(1.25)
+    assert sc.freq(9) == pytest.approx(1.0 * 0.5)  # decayed to t=3
+    assert sc.freq(42) == 0.0
+
+
+def test_scorer_blend_and_score_array_consistent():
+    sc = WorkloadScorer(blend=0.7, decay=0.9)
+    deg = np.asarray([10.0, 5.0, 0.0])
+    sc.set_degree_scale(10.0)
+    for _ in range(5):
+        sc.observe(1)
+    a = sc.score_array(deg)
+    assert a.shape == (3,)
+    for v in range(3):
+        assert a[v] == pytest.approx(sc.cache_score(v, deg[v]))
+    assert a[1] > sc.cache_score(0, 10.0) * 0  # hot low-degree row scores
+    # blend < 1 keeps never-accessed rows positive (device-tier filter)
+    assert sc.cache_score(0, 10.0) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# open loop end to end
+# ---------------------------------------------------------------------------
+def _service(csr, **kw):
+    return LiveQueryService(csr, p=4, cache_bytes=1 << 16, max_batch=16,
+                            **kw)
+
+
+def test_open_loop_bit_exact_vs_closed_loop():
+    csr = powerlaw_graph(60, 4, seed=31)
+    qs = make_queries(csr.degrees, 50, kind="zipf", mix=MIX, seed=32)
+    closed = _service(csr).scheduler.run(qs)
+    clk = VirtualClock()
+    svc = _service(csr, clock=clk)
+    rep = run_open_loop(svc.scheduler, qs,
+                        poisson_arrivals(len(qs), 100.0, seed=33),
+                        clock=clk)
+    assert rep.n_served == len(qs)
+    want = {}
+    for r in closed:
+        want[(r.query.kind, r.query.u, r.query.v, r.query.k)] = r.value
+    for r in rep.results:
+        q = r.query
+        assert r.value == want[(q.kind, q.u, q.v, q.k)]
+
+
+def test_open_loop_deterministic_under_virtual_clock():
+    csr = powerlaw_graph(60, 4, seed=34)
+    qs = make_queries(csr.degrees, 40, kind="zipf", mix=MIX, seed=35)
+    arr = poisson_arrivals(len(qs), 200.0, seed=36)
+
+    def once():
+        clk = VirtualClock()
+        svc = _service(csr, clock=clk, slo=SLOPolicy(headroom_s=0.005))
+        rep = run_open_loop(svc.scheduler, qs, arr, clock=clk)
+        s = rep.summary
+        return (rep.n_served, s.p50_ms, s.p99_ms, s.shed_by_class)
+
+    assert once() == once()
+
+
+def test_open_loop_counts_queueing_delay_from_arrival_stamp():
+    # submit(at=) backdates: a query whose submit call runs late still
+    # measures latency from its schedule arrival
+    clk = VirtualClock()
+    sched = MicrobatchScheduler(_engine(), max_batch=1, clock=clk)
+    clk.advance(2.0)  # the server is 2s behind schedule
+    sched.submit(Query.lcc(1), at=0.5)
+    res = sched.poll()
+    assert res[0].latency_s == pytest.approx(1.5)
+
+
+def test_service_tenant_accounting_sums_and_metrics_registry():
+    csr = powerlaw_graph(80, 4, seed=37)
+    quotas = TenantQuotas.uniform(2, rate_qps=1e6, burst=1e6)
+    svc = _service(csr, quotas=quotas,
+                   scorer=WorkloadScorer(blend=0.5))
+    qs = assign_tenants(
+        make_queries(csr.degrees, 60, kind="zipf", mix=MIX, seed=38),
+        quotas.tenants, rng=np.random.default_rng(39))
+    svc.scheduler.run(qs)
+    for c in svc.runtime.caches:
+        assert sum(c.tenant_bytes().values()) == c.used_bytes
+    reg = svc.metrics_registry()
+    assert reg.total("quota_admitted", tier="serving") == 60
+    got = sum(v for (name, _, tier, _), v in reg.counters().items()
+              if name.startswith("tenant_cache_bytes:")
+              and tier == "host_cache")
+    assert got == sum(c.used_bytes for c in svc.runtime.caches)
+    # per-tenant transport attribution flattened out of ProviderStats
+    assert reg.total("tenant_requests:t0", tier="host") > 0
