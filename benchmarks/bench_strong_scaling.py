@@ -106,6 +106,36 @@ def modeled(quick: bool = True):
     return out
 
 
+def hub_partition_rows(quick: bool = True):
+    """Hub-aware cuts vs equal 1D blocks on the modeled epoch engine
+    (ROADMAP item 2; the serving-side fragment/skew evidence is in
+    ``bench_partition``): per p, the balance of remote gets across
+    ranks and the async makespans under both partitions. Compute stays
+    identical — only ownership boundaries move — so the interesting
+    columns are the get-imbalance and the comm-bound makespan."""
+    from repro.core.partition import partition_hub
+
+    g = powerlaw_graph(8192 if quick else 100000, 28, seed=1)
+    rows = []
+    for p in (4, 8, 16, 32):
+        st_1d = simulate_rma_lcc(g, p)
+        st_hub = simulate_rma_lcc(g, p, part=partition_hub(g.degrees, p))
+        t_1d, _ = _async_time(st_1d)
+        t_hub, _ = _async_time(st_hub)
+        imb = lambda st: float(  # noqa: E731
+            st.post_cache_gets.max() / max(st.post_cache_gets.mean(), 1e-9)
+        )
+        rows.append({
+            "p": p,
+            "async_1d_s": t_1d,
+            "async_hub_s": t_hub,
+            "get_imbalance_1d": round(imb(st_1d), 4),
+            "get_imbalance_hub": round(imb(st_hub), 4),
+            "makespan_gain": round(1 - t_hub / max(t_1d, 1e-12), 4),
+        })
+    return rows
+
+
 MEASURE_SCRIPT = r"""
 from repro.distributed.spmd_runtime import ensure_host_devices
 ensure_host_devices(8)  # preserves external XLA_FLAGS; must precede jax init
@@ -157,6 +187,7 @@ def measured():
 def run(quick: bool = True):
     return {
         "modeled": modeled(quick),
+        "hub_partition": hub_partition_rows(quick),
         "measured_8hostdev": measured(),
         "paper_ref": "Figs. 9/10",
     }

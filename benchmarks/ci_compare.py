@@ -56,6 +56,9 @@ BOOLEANS = [
     "traffic_plane.tenant_isolation_holds",
     "traffic_plane.tenant_accounting_exact",
     "traffic_plane.open_loop_bit_exact",
+    "partition_hub.bit_exact_all",
+    "partition_hub.imbalance_reduced",
+    "partition_hub.skew_reduced",
 ]
 
 

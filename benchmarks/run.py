@@ -32,6 +32,7 @@ def main(argv=None):
         bench_cache_size,
         bench_device_tier,
         bench_intersection,
+        bench_partition,
         bench_reuse,
         bench_roofline,
         bench_schedule_rebuild,
@@ -56,6 +57,7 @@ def main(argv=None):
         "device_tier": lambda: bench_device_tier.run(quick),
         "schedule_rebuild": lambda: bench_schedule_rebuild.run(quick),
         "spmd_scaling": lambda: bench_spmd_scaling.run(quick),
+        "partition_hub": lambda: bench_partition.run(quick),
         "traffic_plane": lambda: bench_traffic.run(quick),
         "roofline": lambda: bench_roofline.run(),
     }
@@ -235,6 +237,21 @@ def checklist(results):
             "SPMD execution: measured all_to_all traffic == modeled "
             "serve matrix on every run (rows and payload bytes)",
             sp["model_agreement_all"],
+        ))
+    ph = results.get("partition_hub", {})
+    if "bit_exact_all" in ph:
+        checks.append((
+            "partition: hub splitting bit-exact vs 1D across "
+            "{loop, spmd} x p in {1,4,8}",
+            ph["bit_exact_all"],
+        ))
+        checks.append((
+            f"partition: hub cuts + fragments reduce load imbalance "
+            f"({ph['load_imbalance_1d']:.2f}x -> "
+            f"{ph['load_imbalance_hub']:.2f}x) and serve-matrix skew "
+            f"({ph['serve_skew_1d']:.2f}x -> {ph['serve_skew_hub']:.2f}x) "
+            f"on the scale-free graph",
+            ph["imbalance_reduced"] and ph["skew_reduced"],
         ))
     tp = results.get("traffic_plane", {})
     if "p99_rises_under_saturation" in tp:

@@ -148,7 +148,11 @@ class ShardedLCCProblem:
                 "problem carries no host worklists; rebuild it with "
                 "build_sharded_problem before applying deltas"
             )
-        part = partition_1d(self.n, self.p)
+        # problems compiled against a custom partition carry it (see
+        # build_sharded_problem); older pickles/tests fall back to 1D.
+        part = getattr(self, "part", None)
+        if part is None:
+            part = partition_1d(self.n, self.p)
         sent = self.sentinel
         w = self.width
 
@@ -317,11 +321,17 @@ def build_sharded_problem(
     cache: Optional[StaticDegreeCache] = None,
     width: Optional[int] = None,
     dedup_rounds: bool = True,
+    part=None,
 ) -> ShardedLCCProblem:
-    """Compile the static pull schedule for a p-way 1D partition."""
+    """Compile the static pull schedule for a p-way contiguous
+    partition — 1D by default; pass ``part`` (any owner/lo/hi/sizes
+    contract holder, e.g. ``partition_hub``) to compile against
+    variable cuts. Per-device row slabs are sized to the LARGEST block
+    so the ``[p, n_loc, ...]`` layout stays rectangular."""
     n_rounds_requested = n_rounds
-    part = partition_1d(csr.n, p)
-    n_loc = part.block
+    if part is None:
+        part = partition_1d(csr.n, p)
+    n_loc = int(np.max(part.sizes(), initial=0))
     w = int(width if width is not None else max(csr.max_degree, 1))
     sent = csr.n
     cache_ids = (
@@ -434,7 +444,7 @@ def build_sharded_problem(
         vc[: ne][ftc[:ne]] = base_fetch + (q * s_max + pos)[:ne][ftc[:ne]]
         edge_vc[k] = vc.astype(np.int32)
 
-    return ShardedLCCProblem(
+    prob = ShardedLCCProblem(
         rows_ext=rows_ext,
         degrees=degrees,
         edge_u=edge_u,
@@ -454,6 +464,11 @@ def build_sharded_problem(
         dedup_rounds=dedup_rounds,
         works=works,
     )
+    # the partition rides along as a plain attribute (not a dataclass
+    # field, so assert_problems_equal keeps comparing arrays only):
+    # apply_delta re-derives worklist ownership from it.
+    prob.part = part
+    return prob
 
 
 # --------------------------------------------------------------------------
@@ -533,12 +548,13 @@ def _compile_schedule(
         vc[idx_all[loc]] = v64[loc] - part.lo(k)
         vc[idx_all[cch]] = base_cache + slots[cch]
         r_of = idx_all // e_chunk
+        lo_arr = np.array([part.lo(q) for q in range(p)], np.int64)
         for r in range(n_rounds):
             idx = np.flatnonzero(ftc & (r_of == r))
             if idx.size == 0:
                 continue
             q = owners[idx]
-            v_local = v64[idx] - np.minimum(q * part.block, n)
+            v_local = v64[idx] - lo_arr[q]
             keys = q * span + v_local
             if dedup_rounds:
                 uniq, first, inv = np.unique(
@@ -632,6 +648,7 @@ def simulate_rma_lcc(
     table_slots_offsets: Optional[int] = None,
     table_slots_adj: Optional[int] = None,
     positional_weight: float = 0.5,
+    part=None,
 ) -> RMATraceStats:
     """Replay the per-device remote-access stream of Algorithm 3.
 
@@ -641,7 +658,8 @@ def simulate_rma_lcc(
     selection to the paper's application-defined degree score.
     """
     net = network or NetworkModel()
-    part = partition_1d(csr.n, p)
+    if part is None:
+        part = partition_1d(csr.n, p)
     deg = csr.degrees
     remote_gets = np.zeros(p, np.int64)
     uniq = np.zeros(p, np.int64)

@@ -6,8 +6,16 @@ serves every consumer — the epoch sweep, streaming maintenance, and
 point-query serving. This module is that layer, extracted so the three
 consumers stop re-implementing single-rank views of it:
 
-- **Ownership** — a ``Partition1D`` answers ``owner(v)`` for every
-  consumer; rank ``k`` owns the contiguous block ``[lo(k), hi(k))``.
+- **Ownership** — a partition (``Partition1D`` or ``HubPartition``)
+  answers ``owner(v)`` for every consumer; rank ``k`` owns the
+  contiguous block ``[lo(k), hi(k))``. The contract (owner/lo/hi/sizes
+  /block/route — see ``core.partition`` and docs/partitioning.md) is
+  all the runtime assumes, so swapping partition families never
+  touches a consumer. With a hub-aware partition, remote misses of
+  split hub rows charge one *fragment* serve per holding rank instead
+  of one whole-row serve from the owner, and ``migrate(new_cuts)``
+  moves ownership boundaries live (cache-invalidation fanout +
+  device-residency handoff + schedule rebuild).
 - **Transport** — ``fetch_rows(rank, vertices)`` is the rank-indexed
   remote-read path: rows owned by ``rank`` are free, remote rows pay the
   modeled ``NetworkModel`` get and pass through rank ``rank``'s
@@ -117,9 +125,15 @@ class ProviderStats:
 
 
 class ShardedRuntime:
-    """Owns the 1D partition, p per-rank caches, the network model, the
-    rank-indexed row transport, and (optionally) the static pull
-    schedule. See the module docstring for the contracts."""
+    """Owns the vertex partition, p per-rank caches, the network model,
+    the rank-indexed row transport, and (optionally) the static pull
+    schedule. See the module docstring for the contracts.
+
+    ``partition`` (optional) installs any object honoring the
+    owner/lo/hi/sizes/block contract — ``partition_1d(n, p)`` by
+    default, ``partition_hub(degrees, p)`` for hub-aware serving. Every
+    consumer reads ownership through ``self.part``, so the choice is
+    made exactly once, here."""
 
     def __init__(
         self,
@@ -134,6 +148,7 @@ class ShardedRuntime:
         uncached: bool = False,
         device_slots: int = 0,
         device_width: Optional[int] = None,
+        partition=None,
     ):
         if store is not None:
             n = int(store.n)
@@ -141,7 +156,16 @@ class ShardedRuntime:
         self.store = store
         self.n = int(n)
         self.p = int(p)
-        self.part: Partition1D = partition_1d(self.n, self.p)
+        if partition is not None:
+            assert partition.n == self.n and partition.p == self.p, (
+                "partition shape mismatch",
+                (partition.n, partition.p),
+                (self.n, self.p),
+            )
+        self.part: Partition1D = (
+            partition if partition is not None
+            else partition_1d(self.n, self.p)
+        )
         self.net = network or NetworkModel()
         self.use_degree_score = use_degree_score
         self.caches: Optional[List[ClampiCache]] = (
@@ -183,6 +207,9 @@ class ShardedRuntime:
         self.schedule_rebuilds = 0
         self.schedule_deltas = 0
         self.schedule_residency_refreshes = 0
+        # online repartitioning ledger (migrate())
+        self.migrations = 0
+        self.rows_migrated = 0
         # optional device-resident hot-row tier, below the host caches.
         # scope="replicated": one manager models the per-device
         # replicated buffer (content identical across ranks by
@@ -355,6 +382,12 @@ class ShardedRuntime:
 
     # ---------------- ownership ----------------
     def owner(self, v):
+        """Owner rank per vertex id (vectorized), delegated to the
+        installed partition. The contract (docs/partitioning.md):
+        ``owner(v) == k  iff  part.lo(k) <= v < part.hi(k)`` — blocks
+        are contiguous and tile ``[0, n)``, for both partition
+        families, and stay true across ``migrate()`` (in-place cut
+        moves)."""
         return self.part.owner(v)
 
     def shard_of(self, vertices: np.ndarray) -> np.ndarray:
@@ -362,6 +395,39 @@ class ShardedRuntime:
         return self.part.owner(np.asarray(vertices, np.int64))
 
     # ---------------- transport ----------------
+    def _charge_remote_miss(
+        self, st: ProviderStats, rank: int, owner: int, v: int,
+        d: int, tenant: str,
+    ) -> int:
+        """Account one remote miss in the serve matrix + byte ledger.
+
+        Non-hub row: one whole-row ship owner -> rank (``d`` ids).
+        Split hub row: one *fragment* ship from every rank holding a
+        nonempty fragment except the reader — the reader's own fragment
+        is rank-resident and free, so the bytes moved are
+        ``d - |own fragment|`` ids spread across up to p-1 servers.
+        This is exactly what the SPMD executor ships (fragment keys over
+        the all_to_all), so measured traffic reconciles row-for-row and
+        byte-for-byte against this model. Returns bytes charged."""
+        part = self.part
+        if getattr(part, "has_hubs", False) and bool(part.is_hub(v)):
+            sizes = part.fragment_sizes(d)
+            bytes_moved = 0
+            for q in range(self.p):
+                if q == rank or sizes[q] == 0:
+                    continue
+                self.serve_rows[q, rank] += 1
+                bytes_moved += int(sizes[q]) * ID_BYTES
+        else:
+            self.serve_rows[owner, rank] += 1
+            bytes_moved = d * ID_BYTES
+        st.bytes_fetched += bytes_moved
+        if tenant:
+            st.tenant_bytes_fetched[tenant] = (
+                st.tenant_bytes_fetched.get(tenant, 0) + bytes_moved
+            )
+        return bytes_moved
+
     def fetch_rows(
         self,
         rank: int,
@@ -374,7 +440,11 @@ class ShardedRuntime:
         Rows owned by ``rank`` bypass the cache (free); remote rows go
         through rank ``rank``'s ClampiCache admission — a hit returns the
         payload captured at fetch time, a miss pays the modeled remote
-        get and ships the row from its owner (serve matrix).
+        get and ships the row from its owner (serve matrix). Under a
+        hub-aware partition a missed *hub* row ships as per-rank
+        fragments instead (``_charge_remote_miss``): every holding rank
+        serves one fragment, the reader's own fragment is free — the
+        returned row is still the full sorted row either way.
 
         ``record`` (optional) collects one ``FetchEvent`` per vertex in
         resolution order: the SPMD executor replays it to decide which
@@ -430,15 +500,11 @@ class ShardedRuntime:
                         continue
                 row = store.row(v)
                 st.cache_misses += 1
-                size = row.size * ID_BYTES
-                st.bytes_fetched += size
                 tenant = tenants.get(v, "") if tenants else ""
-                if tenant:
-                    st.tenant_bytes_fetched[tenant] = (
-                        st.tenant_bytes_fetched.get(tenant, 0) + size
-                    )
-                st.modeled_comm_s += self.net.remote(size)
-                self.serve_rows[owner, rank] += 1
+                moved = self._charge_remote_miss(
+                    st, rank, owner, v, int(row.size), tenant
+                )
+                st.modeled_comm_s += self.net.remote(moved)
                 out[v] = row
                 if record is not None:
                     record.append(FetchEvent(v, "miss", owner))
@@ -496,12 +562,10 @@ class ShardedRuntime:
                     record.append(FetchEvent(v, "hit", owner))
                 continue
             st.cache_misses += 1
-            st.bytes_fetched += size
-            if tenant:
-                st.tenant_bytes_fetched[tenant] = (
-                    st.tenant_bytes_fetched.get(tenant, 0) + size
-                )
-            self.serve_rows[owner, rank] += 1
+            # the cache probe above still keys/charges the FULL row
+            # (capacity + admission semantics are per-row); the serve
+            # matrix and byte ledger charge what actually moves.
+            self._charge_remote_miss(st, rank, owner, v, d, tenant)
             row = store.row(v).copy()
             if cache.contains(v):  # admitted after the miss
                 payloads[v] = row
@@ -574,6 +638,77 @@ class ShardedRuntime:
         NEXT ``invalidate`` skips them on the device tier only — host
         payload caches are always invalidated."""
         self._device_fresh_once = {int(v) for v in ids}
+
+    # ---------------- online repartitioning ----------------
+    def migrate(self, new_cuts) -> int:
+        """Move the ownership boundaries to ``new_cuts`` live, with the
+        full handoff protocol (docs/partitioning.md):
+
+        1. the partition's ``cuts`` mutate IN PLACE, so every consumer
+           holding ``runtime.part`` (SPMD executor, coherence layer, row
+           providers) sees the new ownership atomically;
+        2. rows whose owner changed get the invalidation fanout — host
+           payload caches drop them and coherence listeners observe
+           them, so no rank serves a row it believes it still owns from
+           a stale tier placement;
+        3. per-rank device hot sets are rebuilt against the new
+           exclusion ranges (a rank's newly-owned rows leave its remote
+           hot set; newly-remote rows become eligible) — the
+           device-residency handoff;
+        4. an attached static pull schedule is recompiled against the
+           new cuts (ownership is baked into its worklists).
+
+        Call between batches only (single-writer; mid-batch migration
+        would tear the measured-vs-modeled reconciliation). Returns the
+        number of rows whose owner changed. Bit-exactness: ownership
+        placement never affects answers, only where reads are served
+        from — the tests pin this at p ∈ {1, 4, 8}."""
+        part = self.part
+        assert hasattr(part, "cuts"), (
+            "migrate() needs a cut-based partition (HubPartition)"
+        )
+        new = np.asarray(new_cuts, np.int64)
+        assert new.shape == part.cuts.shape, (new.shape, part.cuts.shape)
+        assert new[0] == 0 and new[-1] == self.n
+        assert bool(np.all(np.diff(new) >= 0)), "cuts must ascend"
+        ids = np.arange(self.n, dtype=np.int64)
+        before = part.owner(ids)
+        part.cuts[:] = new
+        after = part.owner(ids)
+        moved = ids[before != after]
+        if moved.size:
+            self.invalidate(moved.tolist())
+        if self._devices is not None:
+            self.enable_device_tier(
+                self._device_slots, self._device_width, scope="per_rank"
+            )
+        if self.problem is not None:
+            from .rma import build_sharded_problem
+
+            prob = self.problem
+            csr = (
+                self.store.to_csr()
+                if hasattr(self.store, "to_csr")
+                else self.store
+            )
+            cache = (
+                StaticDegreeCache(vertex_ids=prob.cache_ids)
+                if prob.cache_ids.size
+                else None
+            )
+            self.problem = build_sharded_problem(
+                csr,
+                self.p,
+                n_rounds=prob.n_rounds_requested,
+                cache=cache,
+                width=prob.width,
+                dedup_rounds=prob.dedup_rounds,
+                part=part,
+            )
+            self.schedule_rebuilds += 1
+        self.migrations += 1
+        self.rows_migrated += int(moved.size)
+        return int(moved.size)
 
     def _prune_evicted(self, rank: int) -> None:
         """Payloads of entries the cache evicted on its own are dead

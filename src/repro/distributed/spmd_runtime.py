@@ -27,6 +27,16 @@ JAX device mesh, the way the static epoch ``async_engine`` already does
   *by construction* against the modeled matrix, and the recovered
   padding shows up as ``bytes_on_wire`` vs ``bytes_on_wire_single``
   (what the old single-width scheme would have moved).
+- **Hub-fragment fan-out** — under a hub-aware partition
+  (``core.partition.HubPartition``) a fetched split-hub row does not
+  ship whole from its owner: every rank serves its *fragment* (slot
+  keyed ``n + 1 + v`` so fragment and full-row residency never
+  collide), the requester's own fragment stays local, and each pair
+  touching the row expands into sub-pairs whose counts are summed by
+  an additive scatter — the deterministic fragment reduction.
+  Fragments are disjoint contiguous slices of the sorted row, so the
+  reduction is exact and the measured ledger still reconciles
+  row-for-row against the runtime's fragment-charged serve matrix.
 - **Double-buffered units** — ``dispatch()`` packs, patches, and
   launches a unit without blocking; ``PendingUnit.wait()`` is the only
   reconciliation barrier (``jax.block_until_ready``). Callers overlap
@@ -423,13 +433,20 @@ class _ResidentShardBuffer:
                     self.slot_ids[k, s] = -1
                     self.widths[k, s] = 0
 
-    def audit(self, store) -> int:
+    def audit(self, store, expect=None) -> int:
         """Number of mapped rows whose mirror content differs from the
-        authoritative store — 0 under the invalidation contract."""
+        authoritative store — 0 under the invalidation contract.
+        ``expect(k, key)`` (optional) maps a buffer key to its expected
+        content; the default is ``store.row(key)`` (the executor passes
+        a resolver that understands hub-fragment keys)."""
         bad = 0
         for k in range(self.p):
             for v, s in self.slot_of[k].items():
-                row = np.asarray(store.row(v))
+                row = (
+                    expect(k, v)
+                    if expect is not None
+                    else np.asarray(store.row(v))
+                )
                 ok = self.widths[k, s] == row.size and np.array_equal(
                     self.mirror[k, s, : row.size], row
                 )
@@ -566,7 +583,16 @@ class PendingUnit:
         counts = [np.zeros(sz, np.int64) for sz in self.pair_sizes]
         for j in range(self.executor.p):
             for positions, off in self.scatter[j]:
-                counts[j][positions] = arr[j, off : off + positions.size]
+                # additive scatter: a pair against a split hub row
+                # expands into one sub-pair per fragment, all mapped to
+                # the same worklist position — fragments partition the
+                # row, so summing the sub-counts IS the deterministic
+                # fragment reduction (and reduces to plain assignment
+                # when every position is unique, the non-hub case).
+                np.add.at(
+                    counts[j], positions,
+                    arr[j, off : off + positions.size],
+                )
         self._done = (counts, self.unit)
         return self._done
 
@@ -633,12 +659,31 @@ class SpmdIntersectExecutor:
     def invalidate(self, changed_ids=None) -> None:
         """Drop mutated ids from the resident buffer (``None`` = all).
         Wired to the runtime's coherence fanout by the engines; the
-        streaming engine additionally notifies deletions mid-batch."""
+        streaming engine additionally notifies deletions mid-batch.
+        Hub fragments live under synthetic keys ``n + 1 + v`` (see
+        ``dispatch``), so a mutated row drops both its full-row and its
+        fragment residency."""
         self._buf.invalidate(changed_ids)
+        if changed_ids is not None:
+            arr = np.unique(np.asarray(changed_ids, np.int64).ravel())
+            if arr.size:
+                self._buf.invalidate(arr + self.n + 1)
 
     def audit_resident(self, store) -> int:
-        """Stale resident rows vs the authoritative store (0 expected)."""
-        return self._buf.audit(store)
+        """Stale resident rows vs the authoritative store (0 expected).
+        Fragment keys audit against the fragment of the current store
+        row they are defined to mirror."""
+        frag_base = self.n + 1
+        part = self.part
+
+        def expect(k: int, key: int) -> np.ndarray:
+            if key >= frag_base:
+                return part.fragment(
+                    np.asarray(store.row(key - frag_base)), k
+                )
+            return np.asarray(store.row(key))
+
+        return self._buf.audit(store, expect=expect)
 
     # ---------------- compiled-function caches ----------------
     # Two programs, split on purpose: the serve program re-shapes when
@@ -760,51 +805,94 @@ class SpmdIntersectExecutor:
                                n_fetched=n_fetched)
         _pack.__enter__()
 
-        # serve lists: ship[k][j] = rows owner k sends requester j, in
-        # requester fetch order (mirrors the serve_rows accounting).
+        # serve lists: ship[k][j] = buffer keys rank k sends requester
+        # j, in requester fetch order (mirrors serve_rows accounting).
+        # Keys are vertex ids for whole rows; a *split hub* row ships
+        # as per-rank fragments under synthetic keys ``frag_base + v``
+        # (frag_base = n + 1, so full-row and fragment residency never
+        # collide): every rank with a nonempty fragment serves it, the
+        # requester's own fragment stays rank-resident and free —
+        # exactly the charges ``ShardedRuntime._charge_remote_miss``
+        # models, so the reconciliation stays row-for-row.
+        part = self.part
+        hub_split = bool(getattr(part, "has_hubs", False))
+        frag_base = self.n + 1
         ship: List[List[List[int]]] = [
             [[] for _ in range(p)] for _ in range(p)
         ]
         requested: List[set] = [set() for _ in range(p)]
+        # full content of every fetched hub row (fragments slice it)
+        hub_full: Dict[int, np.ndarray] = {}
+        # requester -> fetched hub ids (their own-fragment residency)
+        hub_fetched: List[List[int]] = [[] for _ in range(p)]
         for j, sh in enumerate(shards):
             for v in sh.fetched_ids:
                 v = int(v)
                 assert v not in sh.rows_held, (
                     f"id {v} both held and fetched at rank {j}"
                 )
-                k = int(self.part.owner(v))
+                k = int(part.owner(v))
                 assert k != j, f"rank {j} fetching its own row {v}"
                 if v in requested[j]:
                     continue  # one shipment per (owner, requester, id)
                 requested[j].add(v)
-                ship[k][j].append(v)
+                if hub_split and bool(part.is_hub(v)):
+                    row = hub_full.get(v)
+                    if row is None:
+                        held = shards[k].rows_held.get(v)
+                        row = np.asarray(
+                            held if held is not None else store.row(v)
+                        )
+                        hub_full[v] = row
+                    hub_fetched[j].append(v)
+                    for q in range(p):
+                        if q == j:
+                            continue
+                        if part.fragment(row, q).size == 0:
+                            continue
+                        ship[q][j].append(frag_base + v)
+                else:
+                    ship[k][j].append(v)
 
-        # serve content: an owner ships its authoritative store rows —
-        # reuse a held copy when the owner also holds the row this unit.
+        # serve content: whole rows come from the serving rank's held
+        # copy (else the authoritative store); fragment keys slice the
+        # full hub row — every rank can serve its fragment because the
+        # fragment IS rank q's share of the split row.
         serve_rows_content: List[Dict[int, np.ndarray]] = [
             {} for _ in range(p)
         ]
         for k in range(p):
             for j in range(p):
-                for v in ship[k][j]:
-                    if v not in serve_rows_content[k]:
-                        held = shards[k].rows_held.get(v)
-                        row = held if held is not None else np.asarray(
-                            store.row(v)
-                        )
-                        serve_rows_content[k][v] = row
+                for key in ship[k][j]:
+                    if key not in serve_rows_content[k]:
+                        if key >= frag_base:
+                            row = part.fragment(
+                                hub_full[key - frag_base], k
+                            )
+                        else:
+                            held = shards[k].rows_held.get(key)
+                            row = held if held is not None else np.asarray(
+                                store.row(key)
+                            )
+                        serve_rows_content[k][key] = row
                     unit.rows_shipped[k, j] += 1
                     unit.bytes_payload += (
-                        serve_rows_content[k][v].size * ID_BYTES
+                        serve_rows_content[k][key].size * ID_BYTES
                     )
 
-        # resident working set: held rows plus the rows served from
-        # this rank's buffer — already-resident rows cost zero H2D.
+        # resident working set: held rows, the rows/fragments served
+        # from this rank's buffer, and each requester's own fragment of
+        # every hub row it fetched (local, never on the wire) —
+        # already-resident entries cost zero H2D.
         needed: List[Dict[int, np.ndarray]] = []
         for k, sh in enumerate(shards):
             d = {int(v): np.asarray(row) for v, row in sh.rows_held.items()}
-            for v, row in serve_rows_content[k].items():
-                d.setdefault(v, row)
+            for key, row in serve_rows_content[k].items():
+                d.setdefault(key, row)
+            for v in hub_fetched[k]:
+                own = part.fragment(hub_full[v], k)
+                if own.size:
+                    d.setdefault(frag_base + v, own)
             needed.append(d)
         self._buf.ensure(needed, unit)
         h, w = self._buf.h, self._buf.w
@@ -832,16 +920,22 @@ class SpmdIntersectExecutor:
         has_serve = False
         for k in range(p):
             for j in range(p):
-                for v in ship[k][j]:
+                for key in ship[k][j]:
                     has_serve = True
                     rung = int(np.searchsorted(
-                        widths_arr, max(serve_rows_content[k][v].size, 1),
+                        widths_arr, max(serve_rows_content[k][key].size, 1),
                         side="left",
                     ))
-                    serve_lists[rung].setdefault((k, j), []).append(v)
+                    serve_lists[rung].setdefault((k, j), []).append(key)
         serve_cfg: List[Tuple[int, int]] = []
         serve_segs: List[np.ndarray] = []
-        fetch_idx: List[Dict[int, int]] = [{} for _ in range(p)]
+        # fetch_refs[j][key] -> every (combined-buffer index, width)
+        # that arrived for ``key`` at requester j. Whole rows have one
+        # ref; a split hub row has one ref per serving rank (its
+        # fragments), all under the same ``frag_base + v`` key.
+        fetch_refs: List[Dict[int, List[Tuple[int, int]]]] = [
+            {} for _ in range(p)
+        ]
         fetch_base = h
         wire_bytes = 0
         for rung, w_b in enumerate(widths):
@@ -853,10 +947,13 @@ class SpmdIntersectExecutor:
             if not has_serve:
                 continue
             seg = np.full((p, p, s_b), pad_slot, np.int32)
-            for (k, j), vs in lists.items():
-                for pos, v in enumerate(vs):
-                    seg[k, j, pos] = self._buf.slot_of[k][v]
-                    fetch_idx[j][v] = fetch_base + k * s_b + pos
+            for (k, j), keys in lists.items():
+                for pos, key in enumerate(keys):
+                    seg[k, j, pos] = self._buf.slot_of[k][key]
+                    fetch_refs[j].setdefault(key, []).append((
+                        fetch_base + k * s_b + pos,
+                        serve_rows_content[k][key].size,
+                    ))
             serve_cfg.append((s_b, w_b))
             serve_segs.append(seg)
             fetch_base += p * s_b
@@ -882,33 +979,47 @@ class SpmdIntersectExecutor:
         )
 
         # ---- pair worklists, bucketed by pow-2 pair width ----
-        def row_width(j: int, v: int) -> int:
+        # A pair references each side through its *refs*: the combined-
+        # buffer indices (with true widths) covering that row as read by
+        # rank j. Whole rows — held, served-from-own-buffer, or fetched
+        # — have exactly one ref; a fetched split-hub row has one ref
+        # per nonempty fragment (own fragment resident, the rest in the
+        # fetch block). The pair expands into the cross product of its
+        # sides' refs; fragments partition the row, so the sub-counts
+        # sum to the whole-row intersection (the additive scatter in
+        # ``PendingUnit.wait`` performs that reduction). Everything
+        # reduces to one sub-pair per pair when no hub is split.
+        def refs(j: int, v: int) -> List[Tuple[int, int]]:
             row = needed[j].get(v)
             if row is not None:
-                return row.size
-            return serve_rows_content[int(self.part.owner(v))][v].size
+                return [(self._buf.slot_of[j][v], row.size)]
+            out: List[Tuple[int, int]] = []
+            own = needed[j].get(frag_base + v)
+            if own is not None:
+                out.append((self._buf.slot_of[j][frag_base + v],
+                            own.size))
+            out.extend(fetch_refs[j].get(frag_base + v, ()))
+            out.extend(fetch_refs[j].get(v, ()))
+            return out
 
-        flat_rank: List[int] = []
-        flat_pos: List[int] = []
-        flat_pw: List[int] = []
+        sub_rank: List[int] = []
+        sub_pos: List[int] = []
+        sub_a: List[int] = []
+        sub_b: List[int] = []
+        sub_w: List[int] = []
         for j, sh in enumerate(shards):
             for i in range(sh.pair_a.size):
-                flat_rank.append(j)
-                flat_pos.append(i)
-                flat_pw.append(
-                    max(
-                        row_width(j, int(sh.pair_a[i])),
-                        row_width(j, int(sh.pair_b[i])),
-                        1,
-                    )
-                )
-        flat_rank = np.asarray(flat_rank, np.int64)
-        flat_pos = np.asarray(flat_pos, np.int64)
-
-        def resolve(j: int, v: int) -> int:
-            if v in needed[j]:
-                return self._buf.slot_of[j][v]
-            return fetch_idx[j][v]
+                for ia, wa in refs(j, int(sh.pair_a[i])):
+                    for ib, wb in refs(j, int(sh.pair_b[i])):
+                        sub_rank.append(j)
+                        sub_pos.append(i)
+                        sub_a.append(ia)
+                        sub_b.append(ib)
+                        sub_w.append(max(wa, wb, 1))
+        sub_rank = np.asarray(sub_rank, np.int64)
+        sub_pos = np.asarray(sub_pos, np.int64)
+        sub_a_arr = np.asarray(sub_a, np.int64)
+        sub_b_arr = np.asarray(sub_b, np.int64)
 
         # the fetched block is padded to a grow-only pow-2 capacity so
         # the intersect program's input shape is unit-independent
@@ -917,9 +1028,9 @@ class SpmdIntersectExecutor:
         f_pad = self._f_hw
 
         widths = self._pair_widths(w)
-        flat_pw_arr = np.maximum(np.asarray(flat_pw, np.int64), 1)
+        sub_w_arr = np.maximum(np.asarray(sub_w, np.int64), 1)
         pair_slot = np.searchsorted(
-            np.asarray(widths, np.int64), flat_pw_arr, side="left"
+            np.asarray(widths, np.int64), sub_w_arr, side="left"
         )
         pair_cfg: List[Tuple[int, int, int]] = []
         a_segs: List[np.ndarray] = []
@@ -930,7 +1041,7 @@ class SpmdIntersectExecutor:
         for slot, w_p in enumerate(widths):
             indices = np.flatnonzero(pair_slot == slot)
             e_max = (
-                int(np.max(np.bincount(flat_rank[indices], minlength=p)))
+                int(np.max(np.bincount(sub_rank[indices], minlength=p)))
                 if indices.size
                 else 0
             )
@@ -948,18 +1059,13 @@ class SpmdIntersectExecutor:
                     pairs=int(indices.size),
                 ):
                     for j in range(p):
-                        pos = flat_pos[indices[flat_rank[indices] == j]]
-                        if not pos.size:
+                        sel = indices[sub_rank[indices] == j]
+                        if not sel.size:
                             continue
-                        sh = shards[j]
-                        a_seg[j, : pos.size] = [
-                            resolve(j, int(sh.pair_a[i])) for i in pos
-                        ]
-                        b_seg[j, : pos.size] = [
-                            resolve(j, int(sh.pair_b[i])) for i in pos
-                        ]
-                        m_seg[j, : pos.size] = True
-                        scatter[j].append((pos, seg_off))
+                        a_seg[j, : sel.size] = sub_a_arr[sel]
+                        b_seg[j, : sel.size] = sub_b_arr[sel]
+                        m_seg[j, : sel.size] = True
+                        scatter[j].append((sub_pos[sel], seg_off))
             pair_cfg.append((e_pad, w_p, be))
             a_segs.append(a_seg)
             b_segs.append(b_seg)

@@ -64,6 +64,25 @@ def main(argv=None):
     ap.add_argument("--updates-per-event", type=int, default=64)
     ap.add_argument("--p", type=int, default=4,
                     help="simulated ranks (owner partition for remote reads)")
+    ap.add_argument("--partition", choices=("1d", "hub"), default="1d",
+                    help="vertex ownership: '1d' equal blocks (paper "
+                         "§III-A) or 'hub' balance-aware cuts + degree-"
+                         "threshold hub splitting (hub rows served as "
+                         "per-rank fragments; see docs/partitioning.md)")
+    ap.add_argument("--hub-threshold", type=int, default=None,
+                    help="with --partition hub: degree at/above which a "
+                         "row is fragmented (default: 4x mean degree)")
+    ap.add_argument("--rebalance", action="store_true",
+                    help="with --partition hub: gauge-driven online "
+                         "repartition — when the windowed read imbalance "
+                         "crosses --rebalance-trigger, migrate bounded "
+                         "row ranges toward the degree-balanced cuts "
+                         "(closed-loop runs only)")
+    ap.add_argument("--rebalance-trigger", type=float, default=1.25,
+                    help="windowed max/mean read imbalance that arms a "
+                         "migration")
+    ap.add_argument("--max-moves", type=int, default=4096,
+                    help="rows each cut boundary may move per migration")
     ap.add_argument("--ranks", type=int, default=0,
                     help="cross-rank serving: run this many provider/engine "
                          "instances over the runtime, routing each query to "
@@ -194,6 +213,15 @@ def main(argv=None):
         args.write_frac = 0.0  # open-loop runs are queries-only
     if args.arrivals_out and not args.open_loop:
         ap.error("--arrivals-out records the --open-loop arrival trace")
+    if args.hub_threshold is not None and args.partition != "hub":
+        ap.error("--hub-threshold shapes the hub partition; pass "
+                 "--partition hub")
+    if args.rebalance and args.partition != "hub":
+        ap.error("--rebalance migrates hub-partition cuts; pass "
+                 "--partition hub")
+    if args.rebalance and args.open_loop:
+        ap.error("--rebalance checks the gauge between closed-loop "
+                 "events; open-loop runs are queries-only")
     if args.tenants < 0:
         ap.error("--tenants must be >= 0")
     if args.ewma_scores and not 0.0 <= args.ewma_blend < 1.0:
@@ -271,10 +299,23 @@ def main(argv=None):
              f"{', SPMD device mesh' if args.spmd else ''}]"
              if cross_rank else ""))
 
+    partition = None
+    if args.partition == "hub":
+        from ..core.partition import partition_hub
+
+        partition = partition_hub(
+            csr.degrees, p, threshold=args.hub_threshold
+        )
+        sizes = partition.sizes()
+        print(f"hub partition: {partition.hubs.size} hubs (degree >= "
+              f"{partition.threshold}) fragmented across {p} ranks, "
+              f"blocks {int(sizes.min())}..{int(sizes.max())} rows")
+
     svc = LiveQueryService(
         csr,
         p=p,
         cross_rank=cross_rank,
+        partition=partition,
         cache_bytes=args.cache_kib << 10,
         max_batch=args.batch_window,
         max_wait=(args.max_wait_ms * 1e-3
@@ -293,6 +334,17 @@ def main(argv=None):
         scorer=scorer,
         clock=clock,
     )
+
+    rebalancer = None
+    if args.rebalance:
+        from ..core.repartition import Rebalancer
+
+        rebalancer = Rebalancer(
+            svc.runtime,
+            trigger=args.rebalance_trigger,
+            max_moves=args.max_moves,
+            hub_threshold=args.hub_threshold,
+        )
 
     served = 0
     n_updates = 0
@@ -367,6 +419,11 @@ def main(argv=None):
             if ev.is_update:
                 res = svc.apply_updates(ev.update)
                 n_updates += res.n_inserted + res.n_deleted
+                if rebalancer is not None:
+                    # batch boundary: the scheduler is drained (single-
+                    # writer), so ownership may move here and nowhere
+                    # else.
+                    rebalancer.maybe_rebalance(svc.store.degrees)
                 continue
             if args.max_wait_ms is None:
                 results = svc.scheduler.run(ev.queries)
@@ -458,6 +515,12 @@ def main(argv=None):
         print(f"cross-rank transport: {rt.cross_rank_rows_served()} rows "
               f"shipped owner->requester, invalidation fanout saved "
               f"{rt.invalidation_fanout_saved} msgs vs broadcast")
+    if rebalancer is not None:
+        print(f"rebalance: {rebalancer.migrations} migrations moved "
+              f"{rebalancer.rows_moved} rows "
+              f"(trigger {args.rebalance_trigger}x, "
+              f"<= {args.max_moves} rows/boundary); runtime saw "
+              f"{rt.rows_migrated} ownership changes")
     if args.spmd:
         led = svc.engine.spmd.ledger
         modeled_rows = rt.cross_rank_rows_served()

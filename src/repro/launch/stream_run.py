@@ -70,6 +70,29 @@ def main(argv=None):
                          "of each rank's own remote-heavy rows")
     ap.add_argument("--adversarial", action="store_true",
                     help="hub-targeted deletes (stresses degree-score drift)")
+    ap.add_argument("--partition", choices=("1d", "hub"), default="1d",
+                    help="vertex ownership: '1d' equal blocks or 'hub' "
+                         "balance-aware cuts + hub splitting. The stream "
+                         "starts empty, so hub cuts degenerate to 1D at "
+                         "batch 0 — pair with --rebalance to chase the "
+                         "emerging heavy tail (docs/partitioning.md)")
+    ap.add_argument("--hub-threshold", type=int, default=None,
+                    help="with --partition hub: degree at/above which a "
+                         "row is fragmented (default: recomputed from the "
+                         "live degrees at each rebalance)")
+    ap.add_argument("--rebalance", action="store_true",
+                    help="with --partition hub: between batches, when the "
+                         "windowed read imbalance crosses "
+                         "--rebalance-trigger, refresh the hub set and "
+                         "migrate bounded row ranges toward the degree-"
+                         "balanced cuts (invalidation fanout + residency "
+                         "handoff + schedule rebuild; checkpoints stay "
+                         "bit-exact)")
+    ap.add_argument("--rebalance-trigger", type=float, default=1.25,
+                    help="windowed max/mean read imbalance that arms a "
+                         "migration")
+    ap.add_argument("--max-moves", type=int, default=4096,
+                    help="rows each cut boundary may move per migration")
     ap.add_argument("--cache-rows", type=int, default=256)
     ap.add_argument("--clampi-kib", type=int, default=1024)
     ap.add_argument("--maintain-schedule", action="store_true",
@@ -115,6 +138,12 @@ def main(argv=None):
         ap.error("--pipeline double-buffers SPMD phases; pass --spmd")
     if args.device_scope != "replicated" and not args.device_tier:
         ap.error("--device-scope shapes the device tier; pass --device-tier")
+    if args.hub_threshold is not None and args.partition != "hub":
+        ap.error("--hub-threshold shapes the hub partition; pass "
+                 "--partition hub")
+    if args.rebalance and args.partition != "hub":
+        ap.error("--rebalance migrates hub-partition cuts; pass "
+                 "--partition hub")
     tracer = None
     if args.trace:
         from ..obs import trace as obs_trace
@@ -146,12 +175,26 @@ def main(argv=None):
           f"{args.batches} batches of {batch_size}, ranks={ranks}"
           + ("  [SPMD device mesh]" if args.spmd else ""))
 
+    partition = None
+    if args.partition == "hub":
+        from ..core.partition import partition_hub
+
+        # built against the empty store: no hubs yet, equal cuts — the
+        # rebalancer refreshes both as the heavy tail emerges.
+        partition = partition_hub(
+            np.zeros(n, np.int64), ranks, threshold=args.hub_threshold
+        )
+        print(f"hub partition: starting empty (threshold "
+              f"{partition.threshold}), "
+              + ("rebalancer will chase the live degrees"
+                 if args.rebalance else "static cuts (no --rebalance)"))
     coh = StreamingCacheCoherence(
         n,
         np.zeros(n, np.int64),
         p=ranks,
         cache_rows=args.cache_rows,
         clampi_bytes=args.clampi_kib << 10,
+        partition=partition,
     )
     eng = StreamingLCCEngine.empty(
         n,
@@ -177,8 +220,23 @@ def main(argv=None):
         # refreshes cache_ids in place instead of rebuilding.
         runtime.attach_problem(
             build_sharded_problem(
-                eng.store.to_csr(), ranks, width=64, cache=coh.static
+                eng.store.to_csr(), ranks, width=64, cache=coh.static,
+                part=runtime.part,
             )
+        )
+    rebalancer = None
+    if args.rebalance:
+        from ..core.repartition import Rebalancer
+
+        # load signal: the sharded delta worklist (what shard_imbalance
+        # summarizes) — the coherence replay bypasses fetch_rows, so the
+        # runtime's provider read stats would never move here.
+        rebalancer = Rebalancer(
+            runtime,
+            trigger=args.rebalance_trigger,
+            max_moves=args.max_moves,
+            hub_threshold=args.hub_threshold,
+            reads=lambda: eng.shard_pairs,
         )
 
     def check_schedule():
@@ -198,6 +256,7 @@ def main(argv=None):
             cache=cache,
             width=prob.width,
             dedup_rounds=prob.dedup_rounds,
+            part=runtime.part,
         )
         assert_problems_equal(prob, fresh)
 
@@ -217,6 +276,8 @@ def main(argv=None):
     for i, batch in enumerate(stream):
         t0 = time.perf_counter()
         res = eng.apply_batch(batch)
+        plan = (rebalancer.maybe_rebalance(eng.store.degrees)
+                if rebalancer is not None else None)
         dt = time.perf_counter() - t0
         wall += dt
         verified_last = False
@@ -226,7 +287,9 @@ def main(argv=None):
                 f"{ops / max(dt, 1e-9):,.0f} upd/s"
                 + ("  [compacted]" if res.compacted else "")
                 + ("  [schedule rebuilt]"
-                   if res.schedule_incremental is False else ""))
+                   if res.schedule_incremental is False else "")
+                + (f"  [migrated {plan.n_moved} rows]"
+                   if plan is not None else ""))
         if (not args.no_verify and args.checkpoint_every > 0
                 and (i + 1) % args.checkpoint_every == 0):
             eng.verify()
@@ -246,6 +309,13 @@ def main(argv=None):
           f"{eng.store.n_compactions} compactions")
     print(f"shards[p={ranks}]: worklist shares "
           f"[{', '.join(f'{s:.0%}' for s in shares)}]")
+    if rebalancer is not None:
+        part = runtime.part
+        sizes = part.sizes()
+        print(f"rebalance: {rebalancer.migrations} migrations moved "
+              f"{rebalancer.rows_moved} rows; final cuts "
+              f"{int(sizes.min())}..{int(sizes.max())} rows/rank, "
+              f"{part.hubs.size} hubs (degree >= {part.threshold})")
     print(f"coherence[p={ranks}]: delta-stream hit rate {rep.hit_rate:.1%} "
           f"(static {rep.static_hits}, clampi {rep.clampi_hits} hits / "
           f"{rep.remote_reads} remote reads), "

@@ -355,6 +355,15 @@ def record_runtime(reg: MetricRegistry, runtime) -> None:
     reg.gauge("serve_matrix_skew", imbalance(serve.sum(axis=1)),
               tier="wire")
 
+    # Online repartitioning (core.repartition): how often ownership
+    # moved and how many rows changed hands — zero on static runs.
+    reg.counter("partition_migrations",
+                int(getattr(runtime, "migrations", 0)),
+                tier="host", phase="migrate")
+    reg.counter("rows_migrated",
+                int(getattr(runtime, "rows_migrated", 0)),
+                tier="host", phase="migrate")
+
 
 def imbalance(per_rank) -> float:
     """max/mean over a per-rank load vector — 1.0 is perfectly balanced;

@@ -502,10 +502,13 @@ class ShardedQueryEngine:
             )
 
     def route(self, q: Query) -> int:
-        """Owner rank that executes ``q``."""
+        """Executing rank for ``q`` — the partition's ``route()``, which
+        is the owner except for split hub vertices, whose queries spread
+        round-robin across ranks (any rank can read any row through the
+        transport, so routing moves load, never answers)."""
         if q.kind == QueryKind.TOP_K_LCC:
             return 0
-        return int(self.runtime.part.owner(q.u))
+        return int(self.runtime.part.route(q.u))
 
     def execute_batch(self, queries: Sequence[Query]) -> List[QueryResult]:
         by_rank: Dict[int, List[int]] = {}

@@ -70,6 +70,7 @@ class LiveQueryService:
         quotas=None,  # Optional[traffic.TenantQuotas]
         scorer=None,  # Optional[traffic.WorkloadScorer]
         clock=None,  # injectable time source (traffic clocks)
+        partition=None,  # custom vertex partition (e.g. partition_hub)
     ):
         assert execution == "loop" or cross_rank, (
             "SPMD execution runs the p cross-rank views on devices — "
@@ -101,7 +102,8 @@ class LiveQueryService:
             self.runtime.bind_store(self.store)
         else:
             self.runtime = ShardedRuntime(
-                self.store, p, cache_bytes=cache_bytes, uncached=uncached
+                self.store, p, cache_bytes=cache_bytes, uncached=uncached,
+                partition=partition,
             )
         if device_slots:
             # the device-resident hot-row tier below the host caches:

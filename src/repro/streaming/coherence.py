@@ -101,6 +101,7 @@ class StreamingCacheCoherence:
         rebuild_fraction: float = 0.05,
         network: Optional[NetworkModel] = None,
         runtime: Optional[ShardedRuntime] = None,
+        partition=None,
     ):
         if runtime is None:
             runtime = ShardedRuntime(
@@ -109,6 +110,7 @@ class StreamingCacheCoherence:
                 cache_bytes=clampi_bytes,
                 table_slots=table_slots,
                 network=network,
+                partition=partition,
             )
         assert runtime.caches is not None, (
             "coherence replay needs a cached runtime"

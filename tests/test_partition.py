@@ -1,0 +1,244 @@
+"""Hub-aware partitioning: contract, fragments, migration, bit-exactness.
+
+The contract every consumer shares (docs/partitioning.md): blocks tile
+[0, n) contiguously, owner() inverts lo()/hi(), sizes() sums to n.
+Hub splitting and online migration must change WHERE rows live and HOW
+hub rows ship — never WHAT a query or checkpoint computes.
+"""
+import numpy as np
+import pytest
+
+from conftest import powerlaw_graph
+
+from repro.core.partition import (
+    HubPartition,
+    Partition1D,
+    balanced_cuts,
+    default_hub_threshold,
+    local_block,
+    partition_1d,
+    partition_hub,
+)
+from repro.core.repartition import Rebalancer, plan_repartition
+from repro.core.runtime import ShardedRuntime
+from repro.streaming.incremental import StreamingLCCEngine
+from repro.streaming.updates import EdgeBatch
+
+
+def _contract(part, n, p):
+    """The shared owner/lo/hi/sizes/block invariants."""
+    assert part.sizes().sum() == n
+    assert part.lo(0) == 0 and part.hi(p - 1) == n
+    for k in range(p):
+        lo, hi = part.lo(k), part.hi(k)
+        assert 0 <= lo <= hi <= n
+        assert hi - lo == part.sizes()[k] <= part.block
+        if k + 1 < p:
+            assert hi == part.lo(k + 1)  # contiguous, no gaps
+        if hi > lo:
+            assert np.all(part.owner(np.arange(lo, hi)) == k)
+    if n:
+        v = np.arange(n)
+        owners = part.owner(v)
+        assert owners.min() >= 0 and owners.max() < p
+
+
+@pytest.mark.parametrize("n,p", [(0, 4), (1, 4), (7, 3), (256, 4),
+                                 (3, 8), (5, 16)])
+def test_contract_both_families(n, p):
+    """Both families honor the contract — including p > n, where the
+    trailing ranks own empty blocks."""
+    _contract(partition_1d(n, p), n, p)
+    rng = np.random.default_rng(0)
+    deg = rng.integers(0, 50, size=n)
+    _contract(partition_hub(deg, p), n, p)
+
+
+def test_hub_threshold_boundary():
+    """Degree == threshold is a hub; threshold - 1 is not."""
+    deg = np.array([1, 9, 10, 11, 2, 10], np.int64)
+    part = partition_hub(deg, 2, threshold=10)
+    assert part.threshold == 10
+    assert np.array_equal(part.hubs, [2, 3, 5])
+    assert bool(part.is_hub(2)) and bool(part.is_hub(3))
+    assert not bool(part.is_hub(1))  # deg 9 < threshold
+    assert np.array_equal(part.is_hub([0, 2, 3, 4]),
+                          [False, True, True, False])
+
+
+def test_single_dominant_hub():
+    """One vertex holding most of the edges: its weight is clipped at
+    the threshold (fragmentation spreads the rest), so the remaining
+    ranks still receive non-degenerate blocks, and its fragments
+    reassemble exactly."""
+    n, p = 64, 4
+    deg = np.ones(n, np.int64)
+    deg[17] = 10_000
+    # default threshold: contract holds even when the hub outweighs
+    # whole blocks (cuts cannot split a vertex — blocks may be empty)
+    _contract(partition_hub(deg, p), n, p)
+    # explicit clip: the hub's above-threshold cost is fragmented away,
+    # so every rank still receives a non-degenerate block
+    part = partition_hub(deg, p, threshold=10)
+    assert np.array_equal(part.hubs, [17])
+    assert (part.sizes() > 0).all()
+    row = np.arange(10_000, dtype=np.int32)
+    frags = [part.fragment(row, k) for k in range(p)]
+    assert np.array_equal(np.concatenate(frags), row)
+    assert np.array_equal(part.fragment_sizes(row.size),
+                          [f.size for f in frags])
+    # round-robin routing spreads hub work off the owner
+    assert part.route(17) == 0 % p
+    assert part.route(0) == int(part.owner(0))
+
+
+def test_fragment_reduction_additive():
+    """|A ∩ B| == sum_k |A ∩ frag_k(B)| for sorted rows (fragments are
+    disjoint)."""
+    rng = np.random.default_rng(3)
+    part = partition_hub(np.full(8, 100), 4, threshold=1)
+    a = np.unique(rng.integers(0, 500, 120)).astype(np.int32)
+    b = np.unique(rng.integers(0, 500, 300)).astype(np.int32)
+    whole = np.intersect1d(a, b).size
+    split = sum(
+        np.intersect1d(a, part.fragment(b, k)).size for k in range(4)
+    )
+    assert whole == split
+
+
+def test_balanced_cuts_weighted():
+    w = np.array([10, 1, 1, 1, 1, 1, 1, 10], np.float64)
+    cuts = balanced_cuts(w, 2)
+    assert cuts[0] == 0 and cuts[-1] == 8
+    assert np.all(np.diff(cuts) >= 0)
+    # the heavy endpoints split the middle near-evenly
+    left = w[: cuts[1]].sum()
+    assert abs(left - w.sum() / 2) <= 10
+
+
+def test_default_threshold():
+    assert default_hub_threshold(np.zeros(10, np.int64)) == 2
+    assert default_hub_threshold(np.array([], np.int64)) == 2
+    assert default_hub_threshold(np.full(10, 10)) == 40
+
+
+def test_refresh_hubs_tracks_drift():
+    part = partition_hub(np.zeros(16, np.int64), 4)
+    assert not part.has_hubs
+    deg = np.ones(16, np.int64)
+    deg[3] = 50
+    assert part.refresh_hubs(deg) == 1
+    assert np.array_equal(part.hubs, [3])
+    assert part.threshold == default_hub_threshold(deg)
+    assert part.refresh_hubs(deg, threshold=1000) == 0
+
+
+def test_local_block_any_contiguous_partition():
+    g = powerlaw_graph(128, 8, seed=0)
+    part = partition_hub(g.degrees, 4)
+    for k in range(4):
+        blk = local_block(g, part, k)
+        for v in range(blk.lo, blk.hi):
+            assert np.array_equal(blk.row(v), g.row(v))
+
+
+def test_plan_repartition_bounded_and_monotone():
+    rng = np.random.default_rng(1)
+    deg = rng.zipf(1.6, 512).clip(max=400).astype(np.int64)
+    part = HubPartition(n=512, p=4,
+                        cuts=np.array([0, 128, 256, 384, 512]),
+                        hubs=np.zeros(0, np.int64),
+                        threshold=default_hub_threshold(deg))
+    plan = plan_repartition(part, deg, max_moves=10)
+    if plan is not None:
+        assert np.all(np.abs(plan.new_cuts - plan.old_cuts) <= 10)
+        assert np.all(np.diff(plan.new_cuts) >= 0)
+        assert plan.new_cuts[0] == 0 and plan.new_cuts[-1] == 512
+        # moved ids are exactly the ids whose owner changes
+        before = part.owner(plan.moved).copy()
+        part.cuts[:] = plan.new_cuts
+        after = part.owner(plan.moved)
+        assert np.all(before != after)
+    # converges: repeated planning reaches the balanced target
+    for _ in range(200):
+        p2 = plan_repartition(part, deg, max_moves=10)
+        if p2 is None:
+            break
+        part.cuts[:] = p2.new_cuts
+    assert plan_repartition(part, deg, max_moves=10) is None
+
+
+def _random_batch(rng, n, size, p_delete=0.3):
+    e = rng.integers(0, n, size=(size, 2))
+    op = np.where(rng.random(size) < p_delete, -1, 1).astype(np.int8)
+    return EdgeBatch(u=e[:, 0], v=e[:, 1], op=op)
+
+
+@pytest.mark.parametrize("p", [1, 4, 8])
+def test_hub_partition_streaming_bit_exact(p):
+    """Streaming checkpoints under a hub partition match the unsharded
+    reference bit-exactly at p in {1, 4, 8}."""
+    n = 96
+    rng = np.random.default_rng(7)
+    base = powerlaw_graph(n, 6, seed=2)
+    part = partition_hub(base.degrees, p)
+    ref = StreamingLCCEngine(base, interpret=True)
+    eng = StreamingLCCEngine(
+        base, interpret=True,
+        runtime=ShardedRuntime(n=n, p=p, uncached=True, partition=part),
+    )
+    for _ in range(5):
+        b = _random_batch(rng, n, 40)
+        ref.apply_batch(b)
+        eng.apply_batch(b)
+        assert eng.triangle_count == ref.triangle_count
+        assert np.array_equal(eng.lcc, ref.lcc)
+    eng.verify()
+
+
+@pytest.mark.parametrize("p", [4, 8])
+def test_migration_mid_stream_bit_exact(p):
+    """migrate() between batches (in-place cuts + invalidation fanout)
+    leaves every subsequent checkpoint bit-exact."""
+    n = 96
+    rng = np.random.default_rng(11)
+    base = powerlaw_graph(n, 6, seed=2)
+    part = partition_hub(base.degrees, p)
+    eng = StreamingLCCEngine(
+        base, interpret=True,
+        runtime=ShardedRuntime(n=n, p=p, cache_bytes=1 << 16,
+                               partition=part),
+    )
+    rt = eng.runtime
+    for i in range(6):
+        eng.apply_batch(_random_batch(rng, n, 40))
+        eng.verify()
+        if i == 2:
+            plan = plan_repartition(part, eng.store.degrees, max_moves=8)
+            if plan is not None:
+                moved = rt.migrate(plan.new_cuts)
+                assert moved == plan.n_moved
+                assert rt.migrations == 1
+    # caches stayed coherent across the ownership change
+    cached, stale = rt.audit_freshness()
+    assert stale == 0
+
+
+def test_rebalancer_triggers_and_cools_down():
+    n, p = 128, 4
+    deg = np.ones(n, np.int64)
+    deg[:8] = 60  # rank 0 is overloaded under equal cuts
+    part = HubPartition(n=n, p=p, cuts=np.array([0, 32, 64, 96, 128]),
+                        hubs=np.zeros(0, np.int64), threshold=100)
+    rt = ShardedRuntime(n=n, p=p, uncached=True, partition=part)
+    loads = np.zeros(p)
+    reb = Rebalancer(rt, trigger=1.5, max_moves=16, cooldown=2,
+                     reads=lambda: loads)
+    assert reb.maybe_rebalance(deg) is None  # balanced window: no-op
+    loads[0] += 1000  # skewed window
+    plan = reb.maybe_rebalance(deg)
+    assert plan is not None and reb.migrations == 1
+    assert part.has_hubs  # refresh picked up the heavy rows
+    loads[0] += 1000
+    assert reb.maybe_rebalance(deg) is None  # cooling down
+    assert reb.rows_moved == plan.n_moved
